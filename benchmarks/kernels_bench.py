@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks (CPU jnp paths; Pallas validated separately).
+
+Times the layer-facing ops that the models hot-path through, plus the
+cycle-level systolic simulator. Wall times here are CPU numbers — the
+TPU story lives in the roofline benchmark — but they track relative
+regressions and prove the ops run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.systolic import simulate_dos_3d
+from repro.kernels.dos_matmul import dos_matmul
+from repro.kernels.flash_attention import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention_jnp
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def _timeit(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    a = jnp.asarray(rng.normal(size=(512, 2048)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(2048, 512)), jnp.bfloat16)
+    f = jax.jit(lambda a, b: dos_matmul(a, b))
+    us = _timeit(f, a, b)
+    gf = 2 * 512 * 2048 * 512 / (us / 1e6) / 1e9
+    rows.append(("kernels/dos_matmul_512x2048x512_bf16", us, f"{gf:.1f} GFLOP/s cpu"))
+
+    q = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention_jnp(q, k, v, causal=True))
+    us = _timeit(f, q, k, v)
+    rows.append(("kernels/flash_chunked_1k_gqa", us, "fwd"))
+
+    f = jax.jit(jax.grad(lambda q, k, v: jnp.sum(flash_attention_jnp(q, k, v) ** 2)))
+    us = _timeit(f, q, k, v)
+    rows.append(("kernels/flash_chunked_1k_bwd", us, "custom-vjp"))
+
+    u = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.float32)
+    ld = jnp.asarray(-rng.uniform(0.01, 0.2, size=(2, 1024, 8)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.float32)
+    f = jax.jit(lambda *x: ssm_scan(*x)[0])
+    us = _timeit(f, u, ld, B, C)
+    rows.append(("kernels/ssd_scan_1k_8h", us, "chunk=128"))
+
+    qd = jnp.asarray(rng.normal(size=(8, 1, 16, 64)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(8, 4096, 4, 64)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(8, 4096, 4, 64)), jnp.float32)
+    f = jax.jit(lambda q, k, v: decode_attention(q, k, v, length=4000))
+    us = _timeit(f, qd, kc, vc)
+    rows.append(("kernels/decode_attn_b8_4k_cache", us, "einsum path"))
+
+    A = jnp.asarray(rng.normal(size=(16, 96)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(96, 16)), jnp.float32)
+    t0 = time.perf_counter()
+    r = simulate_dos_3d(A, Bm, 8, 8, 4)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("kernels/systolic_sim_16x96x16_l4", us, f"{r.cycles} cycles"))
+    return rows
+
+
+ALL = [bench_kernels]

@@ -1,0 +1,146 @@
+"""Paper-figure reproductions (Figs. 5-9, Tables I-II) as benchmarks.
+
+Each ``bench_*`` returns (name, us_per_call, derived) rows where
+``derived`` is the reproduced headline number next to the paper's claim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.analytical import optimal_tiers, speedup_3d, tau_2d, tau_3d
+from repro.core.dse import PAPER_WORKLOADS, fig5_sweep, fig6_sweep, fig7_scatter
+from repro.core.ppa import (
+    area_normalized_speedup, array_power, table2_setup, thermal_report,
+)
+
+
+def _timed(fn, reps=1):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return out, us
+
+
+def bench_fig5():
+    """Speedup vs tier count / MAC budget / K. Paper: up to 9.16x at 12
+    tiers, 1.93x at 2 tiers (K=12100, 2^18 MACs); losses for small K."""
+    (tiers, out), us = _timed(lambda: fig5_sweep())
+    s12 = speedup_3d(64, 12100, 147, 2**18, 12)
+    s2 = speedup_3d(64, 12100, 147, 2**18, 2)
+    worst = speedup_3d(64, 255, 147, 2**12, 12)
+    rows = [
+        ("fig5/speedup_12tier_2^18_K12100", us, f"{s12:.2f}x (paper 9.16x)"),
+        ("fig5/speedup_2tier", us, f"{s2:.2f}x (paper 1.93x)"),
+        ("fig5/small_K_loss", us, f"{(1-worst)*100:.0f}% loss (paper 51%)"),
+    ]
+    return rows
+
+
+def bench_fig6():
+    """Speedup vs MAC budget at 4 tiers; threshold N_min = M*N."""
+    (budgets, out, thr), us = _timed(lambda: fig6_sweep())
+    best = max(max(v) for v in out.values())
+    # below N_min = M*N no meaningful 3D speedup should exist (paper's
+    # empirical threshold; our optimizer finds marginal ~1.0x points)
+    below = [
+        s
+        for (n_dim, k), curve in out.items()
+        for b, s in zip(budgets, curve)
+        if b < thr[n_dim]
+    ]
+    return [
+        ("fig6/max_speedup_4tier", us, f"{best:.2f}x (paper 3.13x)"),
+        ("fig6/max_speedup_below_Nmin", us,
+         f"{max(below):.2f}x (~1 => threshold holds)"),
+    ]
+
+
+def bench_fig7():
+    """Optimal-tier scatter over 300 random workloads x 3 MAC budgets;
+    the median optimal tier count shifts right with budget."""
+    res, us = _timed(lambda: fig7_scatter())
+    medians = [r.median for r in res]
+    shift = medians[-1] >= medians[0]
+    return [
+        ("fig7/median_optimal_tiers", us,
+         "/".join(f"{m:.0f}" for m in medians) + f" (rightshift={shift})"),
+    ]
+
+
+def bench_tab1():
+    """Table I workloads: 3D-vs-2D speedup at 2^16 MACs, best tier<=16."""
+    rows = []
+    t0 = time.perf_counter()
+    for name, (m, k, n) in PAPER_WORKLOADS.items():
+        l, cyc = optimal_tiers(m, k, n, 2**16)
+        s = speedup_3d(m, k, n, 2**16, l)
+        rows.append((f"tab1/{name}", 0.0, f"l*={l} speedup={s:.2f}x"))
+    us = (time.perf_counter() - t0) / len(rows) * 1e6
+    return [(n, us, d) for n, _, d in rows]
+
+
+def bench_tab2():
+    """Power: 2D 6.61W / 3D-TSV 6.39W / 3D-MIV 6.26W (+peaks)."""
+    paper = {"2d": (6.61, 14.99), "tsv": (6.39, 14.41), "miv": (6.26, 14.14)}
+    rows = []
+    for name, kw in table2_setup().items():
+        r, us = _timed(lambda kw=kw: array_power(**kw))
+        pt, pp = paper[name]
+        rows.append(
+            (f"tab2/power_{name}", us,
+             f"{r.total_w:.2f}W/{r.peak_w:.2f}W (paper {pt}/{pp})")
+        )
+    return rows
+
+
+def bench_fig8():
+    """Thermal: 2D < 3D-TSV < 3D-MIV, all under the 105C budget."""
+    rows = []
+    for macs in (4096, 16384, 65536):
+        out, us = _timed(
+            lambda m=macs: (
+                thermal_report(m, 1, "2d"),
+                thermal_report(m, 3, "tsv"),
+                thermal_report(m, 3, "miv"),
+            )
+        )
+        t2, tt, tm = out
+        rows.append(
+            (f"fig8/thermal_{macs}mac", us,
+             f"2d={t2.t_max_c:.0f}C tsv={tt.t_max_c:.0f}C miv={tm.t_max_c:.0f}C "
+             f"budget_ok={all(r.within_budget for r in out)}")
+        )
+    return rows
+
+
+def bench_fig9():
+    """Area-normalized performance. Paper: 2-tier 1.19-1.97x; >=4 tiers
+    at 2^18 MACs 1.27-2.83x (TSV) / up to 7.9x (MIV); TSV loses at 4096."""
+    rows = []
+    t0 = time.perf_counter()
+    t2 = area_normalized_speedup(64, 12100, 147, 2**18, 2, "tsv")
+    m2 = area_normalized_speedup(64, 12100, 147, 2**18, 2, "miv")
+    t8 = area_normalized_speedup(64, 12100, 147, 2**18, 8, "tsv")
+    m12 = area_normalized_speedup(64, 12100, 147, 2**18, 12, "miv")
+    small = area_normalized_speedup(64, 12100, 147, 4096, 4, "tsv")
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    rows.append(("fig9/2tier_band", us, f"tsv={t2:.2f} miv={m2:.2f} (paper 1.19-1.97)"))
+    rows.append(("fig9/8tier_tsv", us, f"{t8:.2f}x (paper band 1.27-2.83)"))
+    rows.append(("fig9/12tier_miv", us, f"{m12:.2f}x (paper up to 7.9x)"))
+    rows.append(("fig9/4096mac_tsv_loses", us, f"{small:.2f}x (<1: paper 'up to 75% worse')"))
+    return rows
+
+
+def bench_eqs():
+    """Eq. 1/2 evaluation latency (vectorized over 1e5 workloads)."""
+    M = np.random.default_rng(0).integers(1, 1024, size=100_000)
+    _, us = _timed(lambda: tau_3d(M, 4096, 512, 32, 32, 4))
+    return [("eqs/tau3d_vectorized_100k", us, "cycles/UDF-free")]
+
+
+ALL = [bench_eqs, bench_fig5, bench_fig6, bench_fig7, bench_tab1, bench_tab2,
+       bench_fig8, bench_fig9]

@@ -1,0 +1,48 @@
+"""The paper's design-space exploration, interactive.
+
+Given a GEMM workload and a MAC budget, reports: the optimal 2D array,
+the optimal tier count, speedup, power/area/thermal for the chosen
+config, and how the same decision maps onto a TPU mesh axis (advisor).
+
+Run:  PYTHONPATH=src python examples/dse_explore.py --m 128 --k 8192 --n 512
+"""
+
+import argparse
+
+from repro.core.advisor import GemmShard, score_strategies
+from repro.core.analytical import optimal_tiers, optimize_array_2d, optimize_array_3d, speedup_3d
+from repro.core.ppa import area_normalized_speedup, array_power, thermal_report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=64)
+    ap.add_argument("--k", type=int, default=12100)
+    ap.add_argument("--n", type=int, default=147)
+    ap.add_argument("--macs", type=int, default=2**16)
+    ap.add_argument("--mesh-axis", type=int, default=16)
+    args = ap.parse_args()
+    M, K, N, budget = args.m, args.k, args.n, args.macs
+
+    p2 = optimize_array_2d(M, K, N, budget)
+    print(f"2D optimum:  {p2.rows}x{p2.cols} -> {p2.cycles:.0f} cycles")
+    l, _ = optimal_tiers(M, K, N, budget)
+    p3 = optimize_array_3d(M, K, N, budget, l)
+    print(f"3D optimum:  {l} tiers of {p3.rows}x{p3.cols} -> {p3.cycles:.0f} cycles "
+          f"({speedup_3d(M, K, N, budget, l):.2f}x)")
+
+    for tech in ("tsv", "miv"):
+        ans = area_normalized_speedup(M, K, N, budget, l, tech)
+        pw = array_power(M, K, N, p3.rows, p3.cols, l, tech)
+        th = thermal_report(p3.rows * p3.cols, min(l, 4), tech, M=M, K=K, N=N)
+        print(f"  {tech.upper()}: perf/area {ans:.2f}x vs 2D | {pw.total_w:.2f} W "
+              f"| T_max {th.t_max_c:.0f} C (budget_ok={th.within_budget})")
+
+    print(f"\nTPU mesh axis of {args.mesh_axis} (the 'tiers'):")
+    for s in score_strategies(GemmShard(M=M, K=K, N=N, axis=args.mesh_axis)):
+        print(f"  {s.name:10s} compute {s.compute_s*1e6:9.2f}us "
+              f"coll {s.collective_s*1e6:9.2f}us total {s.total_s*1e6:9.2f}us")
+
+
+if __name__ == "__main__":
+    main()

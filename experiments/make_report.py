@@ -1,0 +1,133 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+the artifacts in experiments/dryrun/.
+
+Usage: PYTHONPATH=src python experiments/make_report.py
+Writes experiments/dryrun_section.md and experiments/roofline_section.md
+(EXPERIMENTS.md includes their content verbatim).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+HERE = pathlib.Path(__file__).resolve().parent
+ART = HERE / "dryrun"
+
+ARCH_ORDER = [
+    "llama-3.2-vision-11b", "smollm-135m", "qwen2.5-3b", "qwen2-72b",
+    "gemma3-1b", "whisper-medium", "zamba2-2.7b", "deepseek-moe-16b",
+    "llama4-scout-17b-a16e", "xlstm-125m",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(strategy=None):
+    arts = {}
+    for p in sorted(ART.glob("*.json")):
+        a = json.loads(p.read_text())
+        if strategy and a.get("strategy") != strategy:
+            continue
+        arts[(a["arch"], a["shape"], a["mesh"], a.get("strategy", "dos"))] = a
+    return arts
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f} GiB"
+
+
+def dryrun_section(arts):
+    lines = [
+        "### Per-cell dry-run results (strategy: dos = paper-faithful baseline)",
+        "",
+        "| arch | shape | mesh | compile | GB/dev | HLO GFLOPs/dev | collectives (counts) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    ok_single = ok_multi = fail = 0
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                a = arts.get((arch, shape, mesh, "dos"))
+                if a is None:
+                    continue
+                if "error" in a:
+                    fail += 1
+                    lines.append(f"| {arch} | {shape} | {mesh} | **FAIL** | | | {a['error'][:60]} |")
+                    continue
+                if mesh == "pod16x16":
+                    ok_single += 1
+                else:
+                    ok_multi += 1
+                cost = a.get("cost_corrected", a["cost"])
+                cc = a.get("collectives_corrected", a["collectives"])["counts"]
+                cstr = " ".join(f"{k.split('-')[-1][:4]}:{v}" for k, v in sorted(cc.items()))
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {a['compile_s']:.0f}s "
+                    f"| {a['memory']['peak_per_device_gb']:.1f} "
+                    f"| {cost.get('flops',0)/1e9:,.0f} | {cstr} |"
+                )
+    lines.insert(0, f"**{ok_single} single-pod + {ok_multi} multi-pod cells compiled OK; {fail} failures.**\n")
+    return "\n".join(lines) + "\n"
+
+
+def roofline_section(arts):
+    lines = [
+        "| arch | shape | GB/dev | compute s | memory s (hlo / kernel) | collective s | dominant | MODEL/HLO | MFU | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            a = arts.get((arch, shape, "pod16x16", "dos"))
+            if a is None or "error" in a:
+                continue
+            r = a["roofline"]
+            note = _note(a)
+            lines.append(
+                f"| {arch} | {shape} | {a['memory']['peak_per_device_gb']:.1f} "
+                f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} / {r['memory_s_kernel']:.3f} "
+                f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+                f"| {r['useful_ratio']:.2f} | {r['mfu']*100:.2f}% | {note} |"
+            )
+    return "\n".join(lines) + "\n"
+
+
+def _note(a):
+    r = a["roofline"]
+    d = r["dominant"]
+    if d == "collective":
+        return ("drop pure-dOS K-sharding where M*N/device is large "
+                "(advisor: megatron/DP mix); reduce-scatter chaining")
+    if d == "memory":
+        if a["mode"] == "decode":
+            return "cache layout/quantization; batch more requests per step"
+        return "fuse optimizer+grad traffic; larger microbatches"
+    return "near roofline: block-size/layout tuning only"
+
+
+def main():
+    arts = load()
+    (HERE / "dryrun_section.md").write_text(dryrun_section(arts))
+    (HERE / "roofline_section.md").write_text(roofline_section(arts))
+    # machine-readable summary for the hillclimb
+    rows = []
+    for (arch, shape, mesh, strat), a in arts.items():
+        if mesh != "pod16x16" or "error" in a:
+            continue
+        r = a["roofline"]
+        rows.append({
+            "arch": arch, "shape": shape, "strategy": strat,
+            "dominant": r["dominant"], "step_s": r["step_s"],
+            "mfu": r["mfu"], "collective_s": r["collective_s"],
+            "compute_s": r["compute_s"],
+            "mem_gb": a["memory"]["peak_per_device_gb"],
+        })
+    rows.sort(key=lambda x: x["mfu"])
+    (HERE / "summary.json").write_text(json.dumps(rows, indent=1))
+    print(f"{len(rows)} single-pod cells summarized; worst MFU:")
+    for r in rows[:6]:
+        print(f"  {r['arch']}/{r['shape']}/{r['strategy']}: mfu={r['mfu']*100:.2f}% "
+              f"dom={r['dominant']} step={r['step_s']*1e3:.1f}ms mem={r['mem_gb']}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Core library: the paper's contribution.
+
+- ``analytical``: Eqs. 1-2 runtime model + array-shape/tier optimizers.
+- ``dataflow``: OS/WS/IS/dOS descriptors + switching activities.
+- ``systolic``: cycle-level functional simulator (validates dOS).
+- ``dse``: the paper's design-space sweeps (Figs. 5-7).
+- ``ppa``: power / area / thermal models (Table II, Figs. 8-9).
+- ``advisor``: the DSE generalized to TPU-mesh sharding choices.
+"""
+
+from . import advisor, analytical, dataflow, dse, ppa, systolic
+from .analytical import (
+    GEMM,
+    ArrayPlan,
+    mac_threshold,
+    optimal_tiers,
+    optimize_array_2d,
+    optimize_array_3d,
+    speedup_3d,
+    tau_2d,
+    tau_3d,
+)
+from .advisor import GemmShard, choose_sharding, score_strategies
+from .dataflow import DOS, IS, OS, WS, dos_activity
+from .systolic import simulate_dos_3d, simulate_os_2d
+
+__all__ = [
+    "advisor",
+    "analytical",
+    "dataflow",
+    "dse",
+    "ppa",
+    "systolic",
+    "GEMM",
+    "ArrayPlan",
+    "mac_threshold",
+    "optimal_tiers",
+    "optimize_array_2d",
+    "optimize_array_3d",
+    "speedup_3d",
+    "tau_2d",
+    "tau_3d",
+    "GemmShard",
+    "choose_sharding",
+    "score_strategies",
+    "DOS",
+    "IS",
+    "OS",
+    "WS",
+    "dos_activity",
+    "simulate_dos_3d",
+    "simulate_os_2d",
+]

@@ -1,0 +1,215 @@
+"""Dataflow advisor: the paper's DSE, extended from tiers to TPU meshes.
+
+The paper asks: *given a GEMM (M, K, N) and a MAC budget, how many tiers
+ℓ should the 3D array have, and does the (ℓ-1)-cycle cross-tier
+reduction pay for itself?* (Eq. 2, Figs. 5-7).
+
+On a TPU mesh the same question becomes: *given a GEMM and a mesh axis
+of size ℓ, which operand dimension do we shard over the axis — and is
+the resulting collective worth it?* The mapping is exact:
+
+  - sharding K over the axis == the paper's dOS: each device holds a
+    K/ℓ slice, computes a partial M x N sum, and the cross-tier adder
+    pile becomes an **all-reduce of the M x N output** (cost grows with
+    ℓ like the paper's ℓ-1 term — same convexity, same optimum).
+  - sharding N (or M) over the axis == WS/IS-in-3D == model/data
+    parallelism: no partial sums, but each device must see the whole A
+    (all-gather of the activations) — the paper's "scaled-out 2D".
+
+The advisor scores each strategy with a roofline-style cost model
+(compute + memory + collective terms, using the v5e constants) and
+returns the winner. The paper's threshold ``N_macs > M*N`` reappears
+naturally: K-sharding wins when the per-device output tile M*N is too
+small to fill the device (e.g. decode GEMMs) and K is large.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .ppa import constants as C
+
+__all__ = ["GemmShard", "score_strategies", "choose_sharding", "Strategy"]
+
+_BF16 = 2  # bytes
+#: per-hop ICI latency. This is where the paper's (l-1) *serial* adder
+#: term survives on a mesh: a ring collective over an axis of size l
+#: costs ~2(l-1) latency hops regardless of payload, so the dOS total is
+#: convex in l exactly like Eq. 2.
+ICI_HOP_LATENCY_S = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    name: str  # 'replicate' | 'shard_M' | 'shard_N' | 'shard_K' (dOS)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def total_s(self) -> float:
+        # Compute and memory overlap on TPU (different units); the
+        # collective is serialized unless overlapped — we model the
+        # pessimistic (paper-faithful: sequential adder pile) case.
+        return max(self.compute_s, self.memory_s) + self.collective_s
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmShard:
+    M: int
+    K: int
+    N: int
+    axis: int  # mesh axis size (the paper's tier count ℓ)
+    bytes_per_el: int = _BF16
+
+    def flops(self) -> float:
+        return 2.0 * self.M * self.K * self.N
+
+
+def _ring_allreduce_s(nbytes: float, axis: int, bw: float) -> float:
+    """Ring all-reduce: 2(l-1)/l of the buffer over the slowest link,
+    plus 2(l-1) serial latency hops (the paper's adder pile)."""
+    return 2.0 * (axis - 1) / axis * nbytes / bw + 2 * (axis - 1) * ICI_HOP_LATENCY_S
+
+
+def _ring_allgather_s(nbytes_shard: float, axis: int, bw: float) -> float:
+    return (axis - 1) * nbytes_shard / bw + (axis - 1) * ICI_HOP_LATENCY_S
+
+
+def score_strategies(
+    g: GemmShard,
+    flops_per_s: float = C.TPU_PEAK_FLOPS_BF16,
+    hbm_bw: float = C.TPU_HBM_BW,
+    ici_bw: float = C.TPU_ICI_BW_PER_LINK,
+    mxu_tile: int = 128,
+) -> list[Strategy]:
+    """Cost each way of mapping the GEMM onto one mesh axis of size ℓ.
+
+    The compute term includes the paper's *fill/quantization* effect:
+    a per-device output tile smaller than the MXU tile (128x128) wastes
+    the systolic array exactly like the paper's ceil(M/R)ceil(N/C)
+    rounding — this is how N_macs > M*N re-emerges at chip level.
+    """
+    L = g.axis
+    b = g.bytes_per_el
+    out: list[Strategy] = []
+
+    def eff(m, n, k):
+        """MXU efficiency from tile quantization (ceil rounding)."""
+        um = -(-m // mxu_tile) * mxu_tile
+        un = -(-n // mxu_tile) * mxu_tile
+        uk = -(-k // 8) * 8
+        return (m * n * k) / (um * un * uk)
+
+    def compute_t(m, n, k):
+        e = max(eff(m, n, k), 1e-6)
+        return 2.0 * m * n * k / (flops_per_s * e) / 1.0
+
+    def memory_t(m, n, k):
+        return b * (m * k + k * n + m * n) / hbm_bw
+
+    # replicate: every device does the whole thing (no collective).
+    out.append(Strategy("replicate", compute_t(g.M, g.N, g.K), memory_t(g.M, g.N, g.K), 0.0))
+    # shard_M (IS-in-3D / data parallel): A row-sharded; B replicated.
+    mL = -(-g.M // L)
+    out.append(Strategy("shard_M", compute_t(mL, g.N, g.K), memory_t(mL, g.N, g.K), 0.0))
+    # shard_N (WS-in-3D / megatron column-parallel): B col-sharded; the
+    # next layer usually needs the full activation -> all-gather output.
+    nL = -(-g.N // L)
+    coll_n = _ring_allgather_s(b * g.M * nL, L, ici_bw)
+    out.append(Strategy("shard_N", compute_t(g.M, nL, g.K), memory_t(g.M, nL, g.K), coll_n))
+    # shard_K (dOS): partial sums all-reduced — the paper's adder pile.
+    kL = -(-g.K // L)
+    coll_k = _ring_allreduce_s(b * g.M * g.N, L, ici_bw)
+    out.append(Strategy("shard_K", compute_t(g.M, g.N, kL), memory_t(g.M, g.N, kL), coll_k))
+    return out
+
+
+def choose_sharding(g: GemmShard, **kw) -> Strategy:
+    """The advisor: minimum-total-time strategy for this GEMM."""
+    return min(score_strategies(g, **kw), key=lambda s: s.total_s)
+
+
+def advise_layer(M: int, K: int, N: int, axis: int, **kw) -> str:
+    return choose_sharding(GemmShard(M=M, K=K, N=N, axis=axis), **kw).name
+
+
+# ---------------------------------------------------------------------------
+# Chain-aware scoring (§Perf B3 lesson)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChainStrategy:
+    name: str
+    compute_s: float
+    collective_s: float
+    reshard_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.collective_s + self.reshard_s
+
+
+def score_block_chain(
+    tokens: int,
+    d_model: int,
+    d_ff: int,
+    n_heads: int,
+    head_dim: int,
+    axis: int,
+    flops_per_s: float = C.TPU_PEAK_FLOPS_BF16,
+    ici_bw: float = C.TPU_ICI_BW_PER_LINK,
+) -> list[ChainStrategy]:
+    """Whole-transformer-block comparison of dOS vs megatron vs zero.
+
+    The single-GEMM model (score_strategies) misses that a *chain* of
+    GEMMs pays a resharding boundary wherever consecutive GEMMs want
+    different input layouts. This is the §Perf B3 lesson: per-GEMM, dOS
+    (shard_K) scores best for decode GEMMs, but megatron's col->row
+    pairing runs the whole attention + MLP chain with ONE collective per
+    pair, while pure dOS pays a reduce-scatter after EVERY GEMM plus
+    latency hops. Counts per block (fwd):
+
+      dOS:       6 GEMMs -> 6 reduce-scatters of each output + hops
+      megatron:  2 collectives (attn out AR, mlp out AR)
+      zero:      0 activation collectives; weight all-gathers instead
+    """
+    b = 2.0
+    L = axis
+    e, f, hd2 = d_model, d_ff, n_heads * head_dim
+    gemm_flops = 2.0 * tokens * (e * hd2 * 2 + e * hd2 + hd2 * e) + 2.0 * tokens * (
+        2 * e * f + f * e
+    )
+    compute = gemm_flops / (L * flops_per_s)
+    hop = ICI_HOP_LATENCY_S
+
+    def ar(nbytes):
+        return 2.0 * (L - 1) / L * nbytes / ici_bw + 2 * (L - 1) * hop
+
+    def rs(nbytes):
+        return (L - 1) / L * nbytes / ici_bw + (L - 1) * hop
+
+    out: list[ChainStrategy] = []
+    # dOS: RS after each of ~6 GEMM outputs (sizes: qkv ~2*e+..., o, 2f, e)
+    dos_coll = (
+        rs(tokens * hd2 * 2 * b) + rs(tokens * e * b)  # qkv + o
+        + 2 * rs(tokens * f * b) + rs(tokens * e * b)  # mlp up/gate + down
+        + rs(tokens * e * b)  # attention-internal regroup
+    )
+    out.append(ChainStrategy("dos", compute, dos_coll, 0.0))
+    # megatron: one AR per pair (attention out, mlp out)
+    meg_coll = 2 * ar(tokens * e * b)
+    out.append(ChainStrategy("megatron", compute, meg_coll, 0.0))
+    # zero: weight all-gathers amortized across the batch's tokens
+    w_bytes = (e * hd2 * 2 + hd2 * e + 3 * e * f) * b
+    zero_coll = (L - 1) / L * w_bytes / ici_bw + (L - 1) * hop
+    out.append(ChainStrategy("zero", gemm_flops / (L * flops_per_s), zero_coll, 0.0))
+    return out
+
+
+def choose_block_strategy(tokens, d_model, d_ff, n_heads, head_dim, axis, **kw):
+    return min(
+        score_block_chain(tokens, d_model, d_ff, n_heads, head_dim, axis, **kw),
+        key=lambda s: s.total_s,
+    )

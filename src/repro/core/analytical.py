@@ -1,0 +1,198 @@
+"""Analytical performance model for 2D and 3D systolic arrays.
+
+Implements and extends the runtime model of the paper (Eqs. 1 and 2),
+which itself extends SCALE-Sim's [13, Eq. (4)] output-stationary model.
+
+A GEMM workload is ``A(M x K) @ B(K x N)``. For an output-stationary (OS)
+2D array with R rows and C columns (``N_macs = R*C``):
+
+    tau_2d = (2R + C + K - 2) * ceil(M/R) * ceil(N/C)          (Eq. 1)
+
+For the distributed-output-stationary (dOS) 3D array with ``l`` tiers of
+R' x C' each (``N_macs = l * R' * C'``), the contraction dim K is split
+across tiers (each works on K/l) and the partial sums are accumulated
+down the tier pile with ``l - 1`` sequential adds:
+
+    tau_3d = (2R' + C' + (ceil(K/l) + l - 1) - 2)
+             * ceil(M/R') * ceil(N/C')                          (Eq. 2)
+
+All functions are vectorized over numpy arrays so the DSE sweeps
+(Figs. 5-7, 9) run in milliseconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import numpy as np
+
+__all__ = [
+    "GEMM",
+    "tau_2d",
+    "tau_3d",
+    "optimize_array_2d",
+    "optimize_array_3d",
+    "speedup_3d",
+    "optimal_tiers",
+    "mac_threshold",
+    "ArrayPlan",
+]
+
+OptMode = Literal["opt", "square"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMM:
+    """A GEMM workload ``A(M x K) @ B(K x N)``."""
+
+    M: int
+    K: int
+    N: int
+    name: str = ""
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.M * self.K * self.N
+
+    @property
+    def macs(self) -> int:
+        return self.M * self.K * self.N
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayPlan:
+    """A chosen array configuration and its predicted runtime (cycles)."""
+
+    rows: int
+    cols: int
+    tiers: int
+    cycles: float
+    n_macs_used: int
+
+    @property
+    def utilization(self) -> float:
+        """Useful MAC-ops per provisioned MAC-cycle (<= 1)."""
+        return np.nan  # filled by callers that know the workload
+
+
+def _ceil_div(a, b):
+    return -(-np.asarray(a) // np.asarray(b))
+
+
+def tau_2d(M, K, N, R, C):
+    """Eq. 1 — runtime in cycles of an OS 2D array (vectorized)."""
+    M, K, N, R, C = np.broadcast_arrays(
+        *(np.asarray(x, dtype=np.int64) for x in (M, K, N, R, C))
+    )
+    return (2 * R + C + K - 2) * _ceil_div(M, R) * _ceil_div(N, C)
+
+
+def tau_3d(M, K, N, R, C, tiers):
+    """Eq. 2 — runtime in cycles of a dOS 3D array (vectorized).
+
+    ``R, C`` are the *per-tier* dimensions. ``tiers == 1`` exactly
+    recovers Eq. 1 (a property test asserts this).
+    """
+    M, K, N, R, C, L = np.broadcast_arrays(
+        *(np.asarray(x, dtype=np.int64) for x in (M, K, N, R, C, tiers))
+    )
+    k_per_tier = _ceil_div(K, L)
+    return (2 * R + C + (k_per_tier + L - 1) - 2) * _ceil_div(M, R) * _ceil_div(N, C)
+
+
+def _best_rc(M, K, N, budget, tiers, mode: OptMode):
+    """Find (R, C) minimizing Eq. 2 for a per-tier MAC budget.
+
+    ``mode='square'`` reproduces the paper's plotted configurations
+    (square tiers, R = C = floor(sqrt(budget))); ``mode='opt'`` searches
+    all useful rectangular shapes with R*C <= budget. Rows beyond M and
+    columns beyond N are never useful (they only add fill/drain time),
+    so the search space is R in [1, min(M, budget)].
+    """
+    budget = int(budget)
+    if budget < 1:
+        raise ValueError(f"per-tier MAC budget must be >= 1, got {budget}")
+    if mode == "square":
+        side = max(int(np.floor(np.sqrt(budget))), 1)
+        r = min(side, _round_up_to_fold(M, side))
+        c = min(side, _round_up_to_fold(N, side))
+        t = tau_3d(M, K, N, r, c, tiers)
+        return int(r), int(c), float(t)
+    # Full search. Candidate R values: 1..min(M, budget); for each, the
+    # best C is min(budget // R, N') where N' rounds N up to its fold
+    # boundary (larger C only adds +C to the fill term).
+    r_max = int(min(M, budget))
+    R = np.arange(1, r_max + 1, dtype=np.int64)
+    C_cap = np.maximum(budget // R, 1)
+    # Optimal C given a fold count f = ceil(N/C) is the smallest C with
+    # that fold count, i.e. C = ceil(N/f). Enumerate both the capped C
+    # and its fold-tightened version.
+    C1 = np.minimum(C_cap, N)
+    f = _ceil_div(N, C1)
+    C2 = _ceil_div(N, f)  # tightened: same folds, smaller C
+    taus1 = tau_3d(M, K, N, R, C1, tiers)
+    taus2 = tau_3d(M, K, N, R, C2, tiers)
+    taus = np.where(taus2 <= taus1, taus2, taus1)
+    Cs = np.where(taus2 <= taus1, C2, C1)
+    # Also tighten R to its fold boundary (same ceil(M/R), smaller R).
+    fR = _ceil_div(M, R)
+    R2 = _ceil_div(M, fR)
+    taus_r = tau_3d(M, K, N, R2, Cs, tiers)
+    taus = np.minimum(taus, taus_r)
+    Rs = np.where(taus_r <= taus, R2, R)
+    i = int(np.argmin(taus))
+    return int(Rs[i]), int(Cs[i]), float(taus[i])
+
+
+def _round_up_to_fold(dim, side):
+    """Smallest R <= side with the same ceil(dim/R) as side (tighten)."""
+    f = -(-int(dim) // int(side))
+    return -(-int(dim) // f)
+
+
+def optimize_array_2d(M, K, N, n_macs, mode: OptMode = "opt") -> ArrayPlan:
+    """Paper's [13] methodology: best (R, C) for a 2D array budget."""
+    r, c, t = _best_rc(M, K, N, n_macs, 1, mode)
+    return ArrayPlan(rows=r, cols=c, tiers=1, cycles=t, n_macs_used=r * c)
+
+
+def optimize_array_3d(M, K, N, n_macs, tiers, mode: OptMode = "opt") -> ArrayPlan:
+    """Best per-tier (R', C') for a 3D array: budget floor(n_macs/tiers).
+
+    The paper rounds the per-tier budget down "to avoid resource
+    over-provision" (Sec. IV-A).
+    """
+    tiers = int(tiers)
+    per_tier = int(n_macs) // tiers
+    r, c, t = _best_rc(M, K, N, per_tier, tiers, mode)
+    return ArrayPlan(rows=r, cols=c, tiers=tiers, cycles=t, n_macs_used=tiers * r * c)
+
+
+def speedup_3d(M, K, N, n_macs, tiers, mode: OptMode = "opt") -> float:
+    """Speedup of the optimized 3D array over the optimized 2D array
+    with the same MAC budget (the y-axis of Figs. 5 and 6)."""
+    t2 = optimize_array_2d(M, K, N, n_macs, mode).cycles
+    t3 = optimize_array_3d(M, K, N, n_macs, tiers, mode).cycles
+    return float(t2 / t3)
+
+
+def optimal_tiers(M, K, N, n_macs, max_tiers: int = 16, mode: OptMode = "opt"):
+    """argmin over tier count of the optimized 3D runtime (Fig. 7)."""
+    best_l, best_t = 1, np.inf
+    for l in range(1, int(max_tiers) + 1):
+        if n_macs // l < 1:
+            break
+        t = optimize_array_3d(M, K, N, n_macs, l, mode).cycles
+        if t < best_t:
+            best_l, best_t = l, t
+    return best_l, best_t
+
+
+def mac_threshold(M, N) -> int:
+    """N_min — minimum MAC budget for 3D to outperform 2D (Sec. IV-A.1).
+
+    The paper finds 3D pays off only once the array can hold the whole
+    M x N output spatially: ``N_macs > M*N``.
+    """
+    return int(M) * int(N)

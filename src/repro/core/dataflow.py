@@ -1,0 +1,128 @@
+"""Dataflow descriptors for 2D/3D systolic arrays (paper Sec. III-C).
+
+The paper discusses four dataflows for mapping a GEMM ``A(MxK) @ B(KxN)``
+onto a systolic array:
+
+- OS  (output stationary):  M,N spatial; K temporal. Outputs accumulate
+  in-place; A streams from the left, B from the top.
+- WS  (weight stationary):  N,K spatial; M temporal. B pre-loaded.
+- IS  (input stationary):   M,K spatial; N temporal. A pre-loaded.
+- dOS (distributed output stationary, the paper's contribution): M,N
+  spatial in-tier, **K spatial across tiers** (K/l per tier) plus an
+  (l-1)-cycle cross-tier accumulation. WS/IS extended to 3D need no
+  inter-tier traffic (they degenerate to model parallelism), which is
+  why the paper focuses on dOS.
+
+Besides the mapping descriptors, this module derives the *switching
+activities* of MACs, horizontal links and vertical (TSV/MIV) links that
+the dynamic power model (core.ppa.power) consumes — the paper found a
+static analysis insufficient precisely because these activities differ
+between the horizontal and vertical links (Sec. IV-B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .analytical import _ceil_div
+
+__all__ = ["Dataflow", "OS", "WS", "IS", "DOS", "Activity", "dos_activity"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataflow:
+    name: str
+    spatial: tuple  # GEMM dims mapped onto array axes (in-tier)
+    temporal: tuple  # GEMM dims mapped onto time
+    tier_dim: str | None  # GEMM dim mapped across tiers (3D only)
+    stationary: str  # which operand (or 'output') stays in place
+    cross_tier_traffic: bool  # does the 3D variant need vertical links?
+
+    def describe(self) -> str:
+        t = f", {self.tier_dim} across tiers" if self.tier_dim else ""
+        return (
+            f"{self.name}: {'/'.join(self.spatial)} spatial, "
+            f"{'/'.join(self.temporal)} temporal{t}; {self.stationary} stationary"
+        )
+
+
+OS = Dataflow("OS", ("M", "N"), ("K",), None, "output", False)
+WS = Dataflow("WS", ("N", "K"), ("M",), None, "B", False)
+IS = Dataflow("IS", ("M", "K"), ("N",), None, "A", False)
+#: The paper's contribution: K split across tiers with cross-tier reduction.
+DOS = Dataflow("dOS", ("M", "N"), ("K/l",), "K", "output", True)
+
+
+@dataclasses.dataclass(frozen=True)
+class Activity:
+    """Average switching activities over a workload's runtime.
+
+    All activities are per-unit-per-cycle event rates in [0, 1]:
+    ``mac`` — fraction of MACs doing useful work in an average cycle;
+    ``hlink`` — word-transfers per horizontal link per cycle;
+    ``vlink`` — word-transfers per vertical (TSV/MIV) link per cycle;
+    ``cycles`` — total runtime (denominator).
+    """
+
+    mac: float
+    hlink: float
+    vlink: float
+    cycles: float
+    hlink_hops_total: float
+    vlink_hops_total: float
+    mac_ops_total: float
+
+
+def dos_activity(M, K, N, R, C, tiers) -> Activity:
+    """Activity factors for dOS on an l-tier (R x C)-per-tier array.
+
+    For tiers == 1 this is plain OS on a 2D array. Derivation (per fold
+    of full tiles, averaged over all folds):
+
+    - MAC-ops: every output element needs K multiply-accumulates, spread
+      over ``l`` tiers; per fold the tile does R*C*ceil(K/l) ops *per
+      tier*.
+    - Horizontal hops: an element of A traverses up to C PEs rightward,
+      an element of B traverses up to R PEs downward (in-plane). Per
+      fold per tier: R*Kl elements x C hops + Kl*C elements x R hops
+      = 2*R*C*Kl word-hops over ~2*R*C in-plane links.
+    - Vertical hops: only the partial-sum accumulation uses the TSV/MIV
+      pile: each of the R*C piles moves one word across each of its
+      (l-1) interfaces per fold -> R*C*(l-1) word-hops over R*C*(l-1)
+      vertical links => per-link activity 1/tau_fold. This is the
+      asymmetry that makes the paper's dynamic power analysis matter.
+    """
+    M, K, N, R, C, L = (int(x) for x in (M, K, N, R, C, tiers))
+    kl = -(-K // L)
+    folds = int(_ceil_div(M, R)) * int(_ceil_div(N, C))
+    tau_fold = 2 * R + C + kl + L - 3 if L > 1 else 2 * R + C + K - 2
+    cycles = float(tau_fold * folds)
+
+    # Useful ops honour ragged edges (average active tile = M*N/folds).
+    mac_ops = float(M * N * K)  # total useful MACs across tiers
+    mac_act = mac_ops / (cycles * R * C * L)
+
+    # Every useful MAC-op implies one A-hop and one B-hop arriving at
+    # that PE, so in-plane word-hops ~= 2 * mac_ops.
+    h_hops = 2.0 * mac_ops
+    n_hlinks = 2.0 * R * C * L
+    h_act = h_hops / (cycles * n_hlinks)
+
+    if L > 1:
+        v_hops = float(R * C * (L - 1) * folds)
+        n_vlinks = float(R * C * (L - 1))
+        v_act = v_hops / (cycles * n_vlinks)
+    else:
+        v_hops, v_act = 0.0, 0.0
+
+    return Activity(
+        mac=mac_act,
+        hlink=h_act,
+        vlink=v_act,
+        cycles=cycles,
+        hlink_hops_total=h_hops,
+        vlink_hops_total=v_hops,
+        mac_ops_total=mac_ops,
+    )

@@ -1,0 +1,104 @@
+"""Design-space exploration sweeps (paper Figs. 5, 6, 7 and Sec. IV-A).
+
+These are the paper's workload/architecture studies, reproduced from the
+analytical model:
+
+- Fig. 5: 3D-vs-2D speedup over tier count, for several MAC budgets and
+  several K (M = 64, N = 147 fixed — ResNet50's RN0 M/N).
+- Fig. 6: speedup over MAC budget at 4 tiers (M = 64), for several N and
+  K; the threshold N_min = M*N below which 3D cannot win.
+- Fig. 7: scatter of the *optimal* tier count for 300 random workloads
+  drawn around ResNet50-like layer dimensions, for three MAC budgets;
+  the optimal-tier distribution shifts right as the budget grows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .analytical import mac_threshold, optimal_tiers, speedup_3d
+
+__all__ = [
+    "fig5_sweep",
+    "fig6_sweep",
+    "fig7_scatter",
+    "random_workloads",
+    "PAPER_WORKLOADS",
+]
+
+# Table I: exemplary layers from current DNN workloads mapped to M, K, N.
+PAPER_WORKLOADS = {
+    "RN0": (64, 12100, 147),  # ResNet50
+    "RN1": (512, 784, 128),
+    "GNMT0": (128, 4096, 2048),  # Google NMT
+    "GNMT1": (320, 4096, 3072),
+    "DB0": (1024, 50000, 16),  # DeepBench
+    "DB1": (35, 2560, 4096),
+    "TF0": (31999, 84, 1024),  # Transformer
+    "TF1": (84, 4096, 1024),
+}
+
+
+def fig5_sweep(
+    mac_budgets=(2**12, 2**14, 2**16, 2**18),
+    ks=(255, 2560, 12100),
+    tiers=tuple(range(1, 17)),
+    M=64,
+    N=147,
+    mode="opt",
+):
+    """Speedup vs tier count for each (MAC budget, K). Returns
+    {(n_macs, K): [speedup per tier count]}."""
+    out = {}
+    for n in mac_budgets:
+        for k in ks:
+            out[(n, k)] = [speedup_3d(M, k, N, n, l, mode) for l in tiers]
+    return tiers, out
+
+
+def fig6_sweep(
+    mac_budgets=tuple(2**p for p in range(10, 19)),
+    ns=(147, 1024),
+    ks=(784, 4096),
+    M=64,
+    tiers=4,
+    mode="opt",
+):
+    """Speedup vs MAC budget at fixed tier count. Returns
+    {(N, K): [speedup per budget]} plus the N_min threshold per N."""
+    out = {}
+    thresholds = {}
+    for n_dim in ns:
+        thresholds[n_dim] = mac_threshold(M, n_dim)
+        for k in ks:
+            out[(n_dim, k)] = [speedup_3d(M, k, n_dim, b, tiers, mode) for b in mac_budgets]
+    return mac_budgets, out, thresholds
+
+
+@dataclasses.dataclass(frozen=True)
+class Fig7Result:
+    mac_budget: int
+    optimal_tiers: np.ndarray  # per workload
+    median: float
+
+
+def random_workloads(n: int = 300, seed: int = 0):
+    """Random workloads 'based on ResNet50 parameters' (Sec. IV-A.2):
+    M, N sampled from conv-layer output/channel ranges, K from the
+    unrolled reduction range of ResNet50 layers."""
+    rng = np.random.default_rng(seed)
+    M = rng.integers(16, 512, size=n)
+    N = 2 ** rng.integers(4, 12, size=n)  # 16..2048 channels-ish
+    K = rng.integers(64, 12100, size=n)
+    return np.stack([M, K, N], axis=1)
+
+
+def fig7_scatter(mac_budgets=(2**14, 2**16, 2**18), n_workloads=300, seed=0, max_tiers=16, mode="opt"):
+    wl = random_workloads(n_workloads, seed)
+    results = []
+    for b in mac_budgets:
+        opt = np.array([optimal_tiers(m, k, n, b, max_tiers, mode)[0] for m, k, n in wl])
+        results.append(Fig7Result(mac_budget=b, optimal_tiers=opt, median=float(np.median(opt))))
+    return results

@@ -1,0 +1,18 @@
+"""Power / area / thermal models for 2D and 3D systolic arrays."""
+
+from . import constants
+from .area import AreaReport, area_normalized_speedup, array_area_um2
+from .power import PowerReport, array_power, table2_setup
+from .thermal import ThermalReport, thermal_report
+
+__all__ = [
+    "constants",
+    "AreaReport",
+    "area_normalized_speedup",
+    "array_area_um2",
+    "PowerReport",
+    "array_power",
+    "table2_setup",
+    "ThermalReport",
+    "thermal_report",
+]

@@ -1,0 +1,56 @@
+"""Area model and area-normalized performance (paper Sec. IV-D, Fig. 9).
+
+2D: every MAC occupies A_MAC. 3D-TSV: each MAC additionally hosts a
+dedicated vertical-link array (the paper deliberately over-provisions a
+TSV array between every vertically adjacent MAC pair as a worst case);
+TSVs carry a keep-out-zone, MIVs are ~3 orders of magnitude smaller
+("monolithic integration only adds a few percent").
+
+Fig. 9 plots runtime-per-total-silicon-area of the 3D array normalized
+to the 2D array: ratio = speedup(l) / (1 + vlink_overhead(l)), where
+the overhead scales with (l-1)/l (the bottom tier has no downward
+links).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..analytical import optimize_array_2d, optimize_array_3d
+from . import constants as C
+
+__all__ = ["AreaReport", "array_area_um2", "area_normalized_speedup"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AreaReport:
+    tech: str
+    total_um2: float  # total silicon area (sum over tiers)
+    footprint_um2: float  # per-tier footprint (the stacked outline)
+    vlink_overhead: float  # vertical-link area / MAC area (per affected MAC)
+
+
+def array_area_um2(n_macs_total: int, tiers: int, tech: str) -> AreaReport:
+    per_tier = n_macs_total // tiers if tiers > 1 else n_macs_total
+    if tech == "2d":
+        a = per_tier * C.A_MAC_UM2
+        return AreaReport("2d", a, a, 0.0)
+    a_v = C.VLINK_BITS * (C.A_TSV_UM2 if tech == "tsv" else C.A_MIV_UM2)
+    frac = (tiers - 1) / tiers  # bottom tier carries no downward vias
+    per_mac = C.A_MAC_UM2 + a_v * frac
+    footprint = per_tier * per_mac
+    return AreaReport(tech, footprint * tiers, footprint, a_v * frac / C.A_MAC_UM2)
+
+
+def area_normalized_speedup(M, K, N, n_macs, tiers, tech, mode="opt") -> float:
+    """Fig. 9's y-axis: (perf/area of 3D) / (perf/area of 2D).
+
+    Both chips are charged their full *provisioned* silicon area (the
+    manufactured array), even when the optimizer maps the workload onto
+    a sub-array — matching the paper's fixed-MAC-budget comparison.
+    """
+    t2 = optimize_array_2d(M, K, N, n_macs, mode)
+    t3 = optimize_array_3d(M, K, N, n_macs, tiers, mode)
+    a2 = array_area_um2(int(n_macs), 1, "2d").total_um2
+    a3 = array_area_um2((int(n_macs) // tiers) * tiers, tiers, tech).total_um2
+    return float((t2.cycles / t3.cycles) * (a2 / a3))

@@ -1,0 +1,116 @@
+"""Dynamic power model for 2D / 3D-TSV / 3D-MIV systolic arrays.
+
+Reproduces the paper's Table II (Sec. IV-B). The paper's central
+observation is that a *static* analysis is insufficient: the dOS
+dataflow drives horizontal links hard while vertical (TSV/MIV) links
+only carry partial-sum accumulation, so the two link classes have very
+different switching activities. This model therefore builds power from
+per-component switched energies x activity rates derived from the
+dataflow (``core.dataflow.dos_activity``):
+
+    P = P_clk+leak(n_macs)                 (clocked every cycle)
+      + P_wire(n_macs, die_side)           (die-size-dependent overhead)
+      + P_mac_dyn(useful MAC-op rate)
+      + P_hlink(in-plane word-hop rate)
+      + P_vlink(vertical net activity; C_TSV vs C_MIV)
+
+Peak power adds the fully-active streaming path on top of the idle
+baseline (paper reports PrimeTime peak).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..dataflow import dos_activity
+from . import constants as C
+
+__all__ = ["PowerReport", "array_power", "table2_setup"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerReport:
+    tech: str  # '2d' | 'tsv' | 'miv'
+    total_w: float
+    peak_w: float
+    components: dict
+    runtime_cycles: float
+
+
+def _die_side_um(n_macs_per_tier: int, tech: str) -> float:
+    # Active-wiring extent only: TSV keep-out zones enlarge the die but
+    # carry no clocked wiring, so they do not add to the clock spine.
+    del tech
+    return math.sqrt(n_macs_per_tier * C.A_MAC_UM2)
+
+
+def array_power(
+    M: int,
+    K: int,
+    N: int,
+    rows: int,
+    cols: int,
+    tiers: int,
+    tech: str,
+) -> PowerReport:
+    """Average + peak power of an array running the (M,K,N) GEMM.
+
+    ``rows, cols`` are per-tier dimensions; ``tech`` selects the
+    vertical-interconnect technology ('2d' forces tiers == 1).
+    """
+    if tech == "2d":
+        assert tiers == 1, "2D array cannot have tiers"
+    act = dos_activity(M, K, N, rows, cols, tiers)
+    n_per_tier = rows * cols
+    n_total = n_per_tier * tiers
+    t_s = act.cycles / C.FREQ_HZ
+
+    # Baseline: clock tree + leakage on every MAC + die-size wiring term.
+    side = _die_side_um(n_per_tier, tech)
+    p_base = n_total * (C.P_CLK_LEAK_PER_MAC_W + C.P_WIRE_PER_MAC_PER_UM_W * side)
+
+    # Useful compute.
+    p_mac = act.mac_ops_total * C.E_MAC_OP_J / t_s
+
+    # In-plane streaming: operands traverse the *full* array width/height
+    # (systolic shifting does not stop at the useful region) - this is
+    # the 2D array's hidden cost when R,C exceed the active M,N tile.
+    kl = -(-K // tiers)
+    a_hops = min(M, rows) * kl * cols * (-(-M // rows)) * (-(-N // cols)) * tiers
+    b_hops = kl * min(N, cols) * rows * (-(-M // rows)) * (-(-N // cols)) * tiers
+    p_hop = (a_hops + b_hops) * C.E_HOP_J / t_s
+
+    # Vertical nets (3D only): bit-level activity x per-bit cap energy.
+    p_v = 0.0
+    if tiers > 1:
+        cap = C.C_TSV_F if tech == "tsv" else C.C_MIV_F
+        n_vbits = n_per_tier * (tiers - 1) * C.VLINK_BITS
+        e_bit = 0.5 * cap * C.VDD**2
+        p_v = C.ALPHA_V * n_vbits * C.FREQ_HZ * e_bit
+
+    total = p_base + p_mac + p_hop + p_v
+    peak = total + n_total * C.E_MAC_PEAK_J * C.FREQ_HZ
+    return PowerReport(
+        tech=tech,
+        total_w=total,
+        peak_w=peak,
+        components={
+            "clk_leak_w": n_total * C.P_CLK_LEAK_PER_MAC_W,
+            "die_wire_w": p_base - n_total * C.P_CLK_LEAK_PER_MAC_W,
+            "mac_dyn_w": p_mac,
+            "hlink_w": p_hop,
+            "vlink_w": p_v,
+        },
+        runtime_cycles=act.cycles,
+    )
+
+
+def table2_setup():
+    """The paper's Table II configurations: workload M,N=128, K=300;
+    3D = 3 tiers x 16384 MACs (128x128); 2D = 49284 MACs (222x222)."""
+    return {
+        "2d": dict(M=128, K=300, N=128, rows=222, cols=222, tiers=1, tech="2d"),
+        "tsv": dict(M=128, K=300, N=128, rows=128, cols=128, tiers=3, tech="tsv"),
+        "miv": dict(M=128, K=300, N=128, rows=128, cols=128, tiers=3, tech="miv"),
+    }

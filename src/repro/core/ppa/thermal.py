@@ -1,0 +1,168 @@
+"""Steady-state thermal model of 2D / 3D stacked arrays (paper Sec. IV-C).
+
+Our HotSpot-6.0 analogue: the die stack is discretized into a
+(tiers x g x g) grid of thermal cells. Steady state solves
+
+    sum_j G_ij (T_j - T_i) + q_i = 0        for every cell i,
+
+with lateral silicon conduction within a tier, vertical conduction
+between tiers (ILD + TSV copper in parallel for the TSV flavour), and a
+package/heatsink path from the *bottom* tier to ambient (the paper
+splits results into "bottom" = near heatsink and "middle" = the rest).
+
+The sparse system is solved with damped Jacobi iterations inside
+``jax.lax.while_loop`` - a pure-JAX stencil relaxation. The power map
+comes from the power model: cells inside the active M x N region carry
+dynamic power, every cell carries clock+leakage; border cells end up
+cooler purely through conduction, reproducing the paper's observed
+in-die variability.
+
+Reproduced qualitative findings (Fig. 8): 3D hotter than 2D; hotter
+with more MACs; MIV hotter than TSV (TSVs add area -> lower power
+density -> better heat spreading); all within the thermal budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .power import array_power
+from . import constants as C
+
+__all__ = ["ThermalReport", "solve_stack", "thermal_report"]
+
+_GRID = 24  # cells per die side
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalReport:
+    tech: str
+    macs_per_tier: int
+    tiers: int
+    t_max_c: float
+    # five-number summaries (min, q1, median, q3, max) per region
+    bottom: tuple
+    middle: tuple | None
+    within_budget: bool
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def solve_stack(q_w, cell_area_mm2, tiers: int, tech: str):
+    """Damped-Jacobi steady-state solve. q_w: (tiers, g, g) power map [W]."""
+    g = q_w.shape[-1]
+    cell_side_m = jnp.sqrt(cell_area_mm2) * 1e-3
+
+    t_si = (C.T_2D_SI_UM if tiers == 1 else C.T_TIER_SI_UM) * 1e-6
+    # Lateral conductance between neighbouring cells (same tier).
+    g_lat = C.K_SI_W_MK * t_si  # * (cell_side / cell_side)
+    # Vertical conductance between stacked cells: ILD film + via metal.
+    a_cell_m2 = cell_area_mm2 * 1e-6
+    g_ild = C.K_ILD_W_MK * a_cell_m2 / (C.T_ILD_UM * 1e-6)
+    if tech == "tsv":
+        # TSV copper in parallel with the ILD (per-cell share of vias).
+        n_vias_cell = C.VLINK_BITS  # ~one MAC pile's worth per cell-column
+        a_cu = n_vias_cell * (C.A_TSV_UM2 * 0.25) * 1e-12  # conductive core
+        g_via = C.K_CU_W_MK * a_cu / (C.T_TIER_SI_UM * 1e-6) * (q_w.shape[1] ** 0)
+        g_vert = g_ild + g_via
+    else:
+        g_vert = g_ild
+    # Heatsink path from the bottom tier.
+    g_sink = a_cell_m2 * 1e6 / C.R_HEATSINK_KMM2_W  # W/K per cell
+    # Lateral edge spreading into the package (per boundary cell).
+    g_edge = C.G_EDGE_PER_MM_W_K * (cell_side_m * 1e3)
+
+    edge_mask = jnp.zeros((g, g))
+    edge_mask = edge_mask.at[0, :].set(1.0).at[-1, :].set(1.0)
+    edge_mask = edge_mask.at[:, 0].set(1.0).at[:, -1].set(1.0)
+
+    def neighbor_sum(T):
+        s = jnp.zeros_like(T)
+        w = jnp.zeros_like(T)
+        # lateral (4-neighbourhood)
+        s = s.at[:, 1:, :].add(g_lat * T[:, :-1, :])
+        w = w.at[:, 1:, :].add(g_lat)
+        s = s.at[:, :-1, :].add(g_lat * T[:, 1:, :])
+        w = w.at[:, :-1, :].add(g_lat)
+        s = s.at[:, :, 1:].add(g_lat * T[:, :, :-1])
+        w = w.at[:, :, 1:].add(g_lat)
+        s = s.at[:, :, :-1].add(g_lat * T[:, :, 1:])
+        w = w.at[:, :, :-1].add(g_lat)
+        if tiers > 1:
+            # vertical between tiers (tier 0 = bottom, near heatsink)
+            s = s.at[1:].add(g_vert * T[:-1])
+            w = w.at[1:].add(g_vert)
+            s = s.at[:-1].add(g_vert * T[1:])
+            w = w.at[:-1].add(g_vert)
+        # heatsink from bottom tier
+        s = s.at[0].add(g_sink * C.T_AMBIENT_C)
+        w = w.at[0].add(g_sink)
+        # edge spreading (every tier's boundary cells)
+        s = s + g_edge * edge_mask * C.T_AMBIENT_C
+        w = w + g_edge * edge_mask
+        return s, w
+
+    T0 = jnp.full_like(q_w, C.T_AMBIENT_C + 20.0)
+
+    def cond(state):
+        T, dT, it = state
+        return (dT > 1e-5) & (it < 200_000)
+
+    def body(state):
+        T, _, it = state
+        s, w = neighbor_sum(T)
+        T_new = (s + q_w) / w
+        T_new = T + 0.9 * (T_new - T)  # light damping
+        return T_new, jnp.max(jnp.abs(T_new - T)), it + 1
+
+    T, _, _ = jax.lax.while_loop(cond, body, (T0, jnp.inf, 0))
+    return T
+
+
+def _power_map(M, K, N, rows, cols, tiers, tech, g=_GRID):
+    """Distribute the power report onto a (tiers, g, g) grid."""
+    rep = array_power(M, K, N, rows, cols, tiers, tech)
+    n_total = rows * cols * tiers
+    base = rep.components["clk_leak_w"] + rep.components["die_wire_w"]
+    dyn = rep.total_w - base
+    q = np.full((tiers, g, g), base / (tiers * g * g), dtype=np.float64)
+    # Active streaming region: rows x cols that actually carry operands.
+    fr = min(M, rows) / rows
+    fc = min(N, cols) / cols
+    gr, gc = max(1, round(g * fr)), max(1, round(g * fc))
+    q[:, :gr, :gc] += dyn / (tiers * gr * gc)
+    return jnp.asarray(q), rep
+
+
+def thermal_report(macs_per_tier: int, tiers: int, tech: str, M=128, K=300, N=128):
+    """Fig. 8 setup: per-layer temperature stats for a given config."""
+    side = int(np.sqrt(macs_per_tier))
+    rows = cols = side
+    q, rep = _power_map(M, K, N, rows, cols, tiers, tech)
+    a_mac = C.A_MAC_UM2
+    if tech == "tsv":
+        a_mac = a_mac + C.VLINK_BITS * C.A_TSV_UM2 * (tiers - 1) / max(tiers, 1)
+    elif tech == "miv":
+        a_mac = a_mac + C.VLINK_BITS * C.A_MIV_UM2 * (tiers - 1) / max(tiers, 1)
+    cell_area_mm2 = (macs_per_tier * a_mac * 1e-6) / (_GRID * _GRID)
+    T = np.asarray(solve_stack(q, cell_area_mm2, tiers, tech))
+
+    def stats(x):
+        return tuple(float(v) for v in np.percentile(x, [0, 25, 50, 75, 100]))
+
+    bottom = stats(T[0])
+    middle = stats(T[1:]) if tiers > 1 else None
+    t_max = float(T.max())
+    return ThermalReport(
+        tech=tech,
+        macs_per_tier=macs_per_tier,
+        tiers=tiers,
+        t_max_c=t_max,
+        bottom=bottom,
+        middle=middle,
+        within_budget=t_max < C.THERMAL_BUDGET_C,
+    )

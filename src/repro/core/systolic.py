@@ -1,0 +1,155 @@
+"""Cycle-level functional simulator of the paper's 2D/3D systolic arrays.
+
+This is the executable form of the paper's Figs. 1-4: it simulates the
+output-stationary (OS) dataflow on a 2D R x C MAC array cycle by cycle,
+and the distributed-output-stationary (dOS) dataflow on an l-tier 3D
+array (per-tier OS on a K/l slice + sequential partial-sum accumulation
+down the tier pile). It serves two purposes:
+
+1. **Correctness of the dataflow**: the simulated array must produce
+   exactly ``A @ B`` (property-tested over random shapes).
+2. **Validation of the analytical model**: the simulated cycle counts
+   must equal Eq. 1 / Eq. 2 of ``core.analytical`` exactly.
+
+The simulation itself is pure JAX (``lax.scan`` over cycles), so it
+vectorizes over tiers with ``vmap`` — i.e. we simulate the 3D array the
+same way the hardware would run it: all tiers in lockstep, then the
+(l-1)-add accumulation.
+
+Mechanics of one OS tile (r, c are PE coordinates):
+  - A enters column 0 skewed by row:   PE(r, 0) receives A[r, t-r] at cycle t
+  - B enters row 0 skewed by column:   PE(0, c) receives B[t-c, c] at cycle t
+  - per cycle: operands shift right/down one PE; each PE multiplies its
+    current pair and accumulates locally.
+  - PE(r, c) therefore sees (A[r, k], B[k, c]) together at cycle r+c+k,
+    accumulating the exact dot product. Compute finishes at cycle
+    R+C+K-2; draining the outputs costs another R cycles, giving
+    Eq. 1's per-fold term (2R + C + K - 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .analytical import tau_2d, tau_3d
+
+__all__ = ["SimResult", "simulate_os_2d", "simulate_dos_3d"]
+
+
+@dataclasses.dataclass
+class SimResult:
+    out: jax.Array  # the computed M x N product
+    cycles: int  # simulated runtime in cycles (incl. fill + drain + reduce)
+    folds: int  # number of serialization steps
+    tiers: int
+
+
+def _injection_schedules(A_tile, B_tile, R, C, K):
+    """Skewed operand injection: Ainj[t, r] = A[r, t-r], Binj[t, c] = B[t-c, c]."""
+    T = R + C + K - 2  # last useful cycle index is (R-1)+(C-1)+(K-1)
+    t = jnp.arange(T)[:, None]
+    r = jnp.arange(R)[None, :]
+    c = jnp.arange(C)[None, :]
+    ka = t - r  # (T, R) index into K for A
+    kb = t - c  # (T, C) index into K for B
+    a_valid = (ka >= 0) & (ka < K)
+    b_valid = (kb >= 0) & (kb < K)
+    Ainj = jnp.where(a_valid, A_tile[r, jnp.clip(ka, 0, K - 1)], 0.0)
+    Binj = jnp.where(b_valid, B_tile[jnp.clip(kb, 0, K - 1), c], 0.0)
+    return Ainj, Binj, T
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _simulate_tile(A_tile, B_tile, R: int, C: int):
+    """Simulate one OS fold on an R x C array. A_tile: (R, K), B_tile: (K, C)."""
+    K = A_tile.shape[1]
+    Ainj, Binj, _T = _injection_schedules(A_tile, B_tile, R, C, K)
+
+    def cycle(carry, inj):
+        a_reg, b_reg, acc = carry
+        a_in, b_in = inj
+        # operands march right / down by one PE per cycle
+        a_reg = jnp.concatenate([a_in[:, None], a_reg[:, :-1]], axis=1)
+        b_reg = jnp.concatenate([b_in[None, :], b_reg[:-1, :]], axis=0)
+        acc = acc + a_reg * b_reg
+        return (a_reg, b_reg, acc), None
+
+    z = jnp.zeros((R, C), A_tile.dtype)
+    (_, _, acc), _ = jax.lax.scan(cycle, (z, z, z), (Ainj, Binj))
+    return acc
+
+
+def simulate_os_2d(A, B, R: int, C: int) -> SimResult:
+    """OS dataflow on a 2D R x C array, with M/N fold serialization.
+
+    Simulated cycles match Eq. 1: (2R + C + K - 2) * ceil(M/R) * ceil(N/C).
+    """
+    A = jnp.asarray(A, jnp.float32)
+    B = jnp.asarray(B, jnp.float32)
+    M, K = A.shape
+    K2, N = B.shape
+    assert K == K2, (A.shape, B.shape)
+    m_folds = -(-M // R)
+    n_folds = -(-N // C)
+    # Pad to full fold tiles; ragged edges are computed with zero padding
+    # (hardware would gate those PEs off; runtime is unchanged).
+    Ap = jnp.pad(A, ((0, m_folds * R - M), (0, 0)))
+    Bp = jnp.pad(B, ((0, 0), (0, n_folds * C - N)))
+    A_tiles = Ap.reshape(m_folds, R, K)
+    B_tiles = Bp.reshape(K, n_folds, C).transpose(1, 0, 2)
+    # vmap over fold tiles = serial steps in hardware, identical math.
+    sim = jax.vmap(jax.vmap(_simulate_tile, (None, 0, None, None)), (0, None, None, None))
+    tiles = sim(A_tiles, B_tiles, R, C)  # (m_folds, n_folds, R, C)
+    out = tiles.transpose(0, 2, 1, 3).reshape(m_folds * R, n_folds * C)[:M, :N]
+    cycles = int(tau_2d(M, K, N, R, C))
+    return SimResult(out=out, cycles=cycles, folds=m_folds * n_folds, tiers=1)
+
+
+def simulate_dos_3d(A, B, R: int, C: int, tiers: int) -> SimResult:
+    """dOS dataflow on an l-tier 3D array of R x C tiles (paper Figs. 3-4).
+
+    K is split into ceil(K/l) slices; every tier runs OS on its slice in
+    lockstep (vmap); then each output pile accumulates its l partial
+    sums with l-1 sequential cross-tier adds (the TSV/MIV traffic).
+    Simulated cycles match Eq. 2.
+    """
+    A = jnp.asarray(A, jnp.float32)
+    B = jnp.asarray(B, jnp.float32)
+    M, K = A.shape
+    _, N = B.shape
+    L = int(tiers)
+    kl = -(-K // L)
+    # Pad K so every tier gets a full slice (zeros contribute nothing).
+    Ap = jnp.pad(A, ((0, 0), (0, kl * L - K)))
+    Bp = jnp.pad(B, ((0, kl * L - K), (0, 0)))
+    A_sl = Ap.reshape(M, L, kl).transpose(1, 0, 2)  # (L, M, kl)
+    B_sl = Bp.reshape(L, kl, N)  # (L, kl, N)
+
+    m_folds = -(-M // R)
+    n_folds = -(-N // C)
+    Apad = jnp.pad(A_sl, ((0, 0), (0, m_folds * R - M), (0, 0)))
+    Bpad = jnp.pad(B_sl, ((0, 0), (0, 0), (0, n_folds * C - N)))
+    A_tiles = Apad.reshape(L, m_folds, R, kl)
+    B_tiles = Bpad.reshape(L, kl, n_folds, C).transpose(0, 2, 1, 3)
+
+    sim_tile = jax.vmap(_simulate_tile, (0, 0, None, None))  # over tiers
+    sim_nf = jax.vmap(sim_tile, (None, 1, None, None))  # over n folds
+    sim_mf = jax.vmap(sim_nf, (1, None, None, None))  # over m folds
+    partial = sim_mf(A_tiles, B_tiles, R, C)  # (m_folds, n_folds, L, R, C)
+
+    # Cross-tier accumulation pile: l-1 strictly sequential adds, exactly
+    # as the partial sums ripple down the TSV/MIV pile to the bottom tier.
+    def add_down(acc, tier_partial):
+        return acc + tier_partial, None
+
+    init = partial[:, :, 0]
+    stacked = partial[:, :, 1:].transpose(2, 0, 1, 3, 4)  # (L-1, mf, nf, R, C)
+    acc, _ = jax.lax.scan(add_down, init, stacked)
+    out = acc.transpose(0, 2, 1, 3).reshape(m_folds * R, n_folds * C)[:M, :N]
+    cycles = int(tau_3d(M, K, N, R, C, L))
+    return SimResult(out=out, cycles=cycles, folds=m_folds * n_folds, tiers=L)

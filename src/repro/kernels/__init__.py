@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (validated on CPU via interpret mode).
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper with CPU fallback) and ref.py
+(pure-jnp oracle).
+"""
+
+from .dos_matmul import dos_matmul
+from .flash_attention import decode_attention, flash_attention
+from .ssm_scan import ssm_scan
+
+__all__ = ["dos_matmul", "flash_attention", "decode_attention", "ssm_scan"]

@@ -1,0 +1,5 @@
+from .kernel import dos_matmul_pallas
+from .ops import dos_matmul, pick_blocks
+from .ref import dos_matmul_ref, matmul_ref
+
+__all__ = ["dos_matmul", "dos_matmul_pallas", "dos_matmul_ref", "matmul_ref", "pick_blocks"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the dOS matmul kernel.
+
+``dos_matmul_ref`` reproduces the kernel's *exact* accumulation order:
+K is split into ``n_tiers`` contiguous slices ("tiers"); each tier
+produces a partial sum in f32; partial sums are added sequentially down
+the pile (paper Fig. 3). For well-conditioned inputs this equals
+``a @ b`` up to f32 rounding, which the property tests assert.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    """Plain f32-accumulated matmul (the mathematical ground truth)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def dos_matmul_ref(a, b, n_tiers: int = 1, out_dtype=None):
+    """Tier-split matmul with the kernel's accumulation order."""
+    out_dtype = out_dtype or a.dtype
+    k = a.shape[-1]
+    assert b.shape[0] == k, (a.shape, b.shape)
+    assert k % n_tiers == 0, f"K={k} must divide into {n_tiers} tiers"
+    kl = k // n_tiers
+    acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    for t in range(n_tiers):  # sequential adder pile
+        sl = slice(t * kl, (t + 1) * kl)
+        acc = acc + jnp.dot(a[:, sl], b[sl, :], preferred_element_type=jnp.float32)
+    return acc.astype(out_dtype)

@@ -1,0 +1,147 @@
+"""Public attention ops used by the model zoo.
+
+``flash_attention``: training/prefill attention over full sequences.
+On TPU it dispatches to the Pallas kernel; on CPU to the jnp reference
+(clean HLO for smoke tests and the multi-pod dry-run).
+
+``decode_attention``: single-token attention against a KV cache. This
+is a bandwidth-bound matvec (no flash tiling needed); implemented as
+einsum so XLA shards it freely across the mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...parallel.axes import shard
+from .chunked import flash_core
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "decode_attention", "flash_attention_jnp"]
+
+
+def flash_attention_jnp(q, k, v, *, causal=True, window=None, scale=None,
+                        q_offset=0, chunk=512, unroll=False):
+    """Chunked flash attention (custom-VJP lax.scan) on (B,S,H,D)
+    layouts — the CPU/dry-run path with kernel-equivalent memory
+    behaviour. ``window`` may be a traced scalar."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+    win = jnp.float32(jnp.inf) if window is None else jnp.asarray(window, jnp.float32)
+    chunk = min(chunk, skv)
+    o = flash_core(qt, kt, vt, win, causal, float(scale), int(q_offset), chunk, unroll)
+    return o.transpose(0, 2, 1, 3)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, KVH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+    interpret: bool | None = None,
+    force_ref: bool = False,
+    unroll: bool = False,
+) -> jax.Array:
+    """Dispatching wrapper (plain function — the surrounding model jit
+    traces it; keeping it un-jitted preserves python ints as static
+    tiling params for the Pallas path)."""
+    if force_ref:
+        return attention_ref(
+            q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset
+        )
+    if interpret is None:
+        if jax.default_backend() != "tpu":
+            return flash_attention_jnp(
+                q, k, v, causal=causal, window=window, scale=scale,
+                q_offset=q_offset, unroll=unroll,
+            )
+        interpret = False
+
+    # Pallas path: tiling parameters must be static Python values.
+    assert window is None or isinstance(window, int), (
+        "traced `window` is only supported on the jnp reference path"
+    )
+    assert q_offset is None or isinstance(q_offset, int)
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    group = h // kvh
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, d)
+    bq = min(128, sq)
+    bk = min(128, skv)
+    o = flash_attention_pallas(
+        qf,
+        kf,
+        vf,
+        group=group,
+        heads=h,
+        causal=causal,
+        window=window,
+        scale=scale,
+        q_offset=q_offset,
+        bq=bq,
+        bk=bk,
+        interpret=interpret,
+    )
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, D)
+    k_cache: jax.Array,  # (B, S, KVH, D)
+    v_cache: jax.Array,
+    *,
+    length: jax.Array | int,  # valid cache length (scalar or per-batch)
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """One decode step: q attends to the first ``length`` cache slots
+    (and at most the trailing ``window`` of them, if sliding)."""
+    b, _, h, d = q.shape
+    _, s, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qf = qf.reshape(b, 1, kvh, g, d)
+    # match the cache layout (KVH-sharded when divisible) so the logits
+    # einsum partitions by head instead of all-gathering the cache.
+    qf = shard(qf, "decode_q_h")
+    # keep the cache in its storage dtype: casting it to f32 would
+    # materialize a full second copy (the Pallas kernel casts per tile);
+    # f32 accumulation comes from preferred_element_type.
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qf, k_cache,
+        preferred_element_type=jnp.float32,
+    )  # (b, kvh, g, 1, s)
+
+    pos = jnp.arange(s)
+    length = jnp.asarray(length)
+    valid = pos[None, :] < jnp.broadcast_to(length, (b,))[:, None]
+    if window is not None:
+        valid = valid & (pos[None, :] > jnp.broadcast_to(length, (b,))[:, None] - 1 - window + 0)
+        # window includes the newest position (index length-1)
+    neg = jnp.finfo(jnp.float32).min * 0.7
+    logits = jnp.where(valid[:, None, None, None, :], logits, neg)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(b, 1, h, d).astype(q.dtype)

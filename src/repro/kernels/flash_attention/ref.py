@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+Layout convention: q (B, Sq, H, D); k, v (B, Skv, KVH, D) with
+H = G * KVH (GQA groups). Masks: causal, sliding-window (attend to the
+last ``window`` positions incl. self), or full (cross-attention).
+All math in f32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref", "NEG_INF"]
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def attention_ref(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+):
+    """Reference attention. ``q_offset`` places the query block at
+    absolute positions [q_offset, q_offset+Sq) relative to the keys
+    (used for decode: Sq=1, q_offset=cache_len-1)."""
+    b, sq, h, d = q.shape
+    _, skv, kvh, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask = mask & (kj <= qi)
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)

@@ -1,0 +1,5 @@
+from .kernel import ssm_scan_pallas
+from .ops import ssm_scan, ssm_scan_chunked_jnp
+from .ref import ssm_scan_ref, ssm_step_ref
+
+__all__ = ["ssm_scan", "ssm_scan_pallas", "ssm_scan_chunked_jnp", "ssm_scan_ref", "ssm_step_ref"]

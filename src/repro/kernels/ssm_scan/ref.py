@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the chunked SSD scan.
+
+Generalized linear-recurrence (SSD) form, per batch b and head h:
+
+    s_t = a_t * s_{t-1} + B_t u_t^T          s in R^{N x P}
+    y_t = s_t^T C_t                          y in R^P
+
+where a_t = exp(ld_t) is a scalar-per-(step, head) decay given as
+log-decay ld_t <= 0, and u_t in R^P is the (already-scaled) input.
+
+This covers both users in the zoo:
+- Mamba2:  ld_t = dt_t * A_h (A_h < 0), u_t = dt_t * x_t
+- mLSTM:   ld_t = log f_t (forget gate), u_t = v_t, B_t = i_t * k_t,
+           C_t = q_t (plus a P=1 normalizer scan)
+
+The reference materializes the recurrence step by step with
+``lax.scan`` — the ground truth the chunked kernel must match.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssm_scan_ref", "ssm_step_ref"]
+
+
+def ssm_scan_ref(u, ld, B, C, s0=None):
+    """u: (Bt, S, H, P), ld: (Bt, S, H), B/C: (Bt, S, H, N).
+
+    Returns y: (Bt, S, H, P) and the final state (Bt, H, N, P).
+    """
+    bt, s, h, p = u.shape
+    n = B.shape[-1]
+    uf = u.astype(jnp.float32)
+    af = jnp.exp(ld.astype(jnp.float32))
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((bt, h, n, p), jnp.float32)
+
+    def step(state, inp):
+        u_t, a_t, b_t, c_t = inp  # (bt,h,p), (bt,h), (bt,h,n), (bt,h,n)
+        state = (
+            a_t[:, :, None, None] * state
+            + b_t[:, :, :, None] * u_t[:, :, None, :]
+        )
+        y_t = jnp.einsum("bhnp,bhn->bhp", state, c_t)
+        return state, y_t
+
+    inputs = (
+        uf.transpose(1, 0, 2, 3),
+        af.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2, 3),
+        Cf.transpose(1, 0, 2, 3),
+    )
+    final, ys = jax.lax.scan(step, s0, inputs)
+    y = ys.transpose(1, 0, 2, 3)  # (bt, s, h, p)
+    return y.astype(u.dtype), final
+
+
+def ssm_step_ref(state, u_t, ld_t, B_t, C_t):
+    """Single decode step. state: (Bt,H,N,P); u_t: (Bt,H,P);
+    ld_t: (Bt,H); B_t/C_t: (Bt,H,N). Returns (y_t, new_state)."""
+    a_t = jnp.exp(ld_t.astype(jnp.float32))
+    state = (
+        a_t[:, :, None, None] * state
+        + B_t.astype(jnp.float32)[:, :, :, None] * u_t.astype(jnp.float32)[:, :, None, :]
+    )
+    y_t = jnp.einsum("bhnp,bhn->bhp", state, C_t.astype(jnp.float32))
+    return y_t.astype(u_t.dtype), state

@@ -1,0 +1,107 @@
+"""Serving launcher: batched prefill + decode loop.
+
+Drives the same prefill/serve steps the dry-run lowers, on real
+devices. Measures prefill latency and decode throughput; the examples
+use it with reduced configs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, reduced
+from ..models import build
+from ..parallel.axes import ShardingRules, param_sharding, use_rules
+from .mesh import make_test_mesh
+
+
+def serve_loop(
+    cfg,
+    *,
+    batch: int = 4,
+    prompt_len: int = 64,
+    gen_tokens: int = 32,
+    strategy: str = "dos",
+    mesh_shape=(1, 1),
+    seed: int = 0,
+    greedy: bool = True,
+):
+    mesh = make_test_mesh(*mesh_shape)
+    rules = ShardingRules(mesh, strategy=strategy, fsdp=False)
+    model = build(cfg)
+    max_len = prompt_len + gen_tokens
+
+    with use_rules(rules), mesh:
+        ps = param_sharding(model.defs, rules)
+        params = jax.device_put(model.init(jax.random.PRNGKey(seed)), ps)
+
+        rng = jax.random.PRNGKey(seed + 1)
+        prompts = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab)
+        pf_batch = {"tokens": prompts}
+        if cfg.family == "vlm":
+            pf_batch["image_embeds"] = jax.random.normal(
+                rng, (batch, cfg.n_image_tokens, cfg.d_model),
+                dtype=jnp.dtype(cfg.compute_dtype),
+            )
+        if cfg.family == "encdec":
+            pf_batch["enc_frames"] = jax.random.normal(
+                rng, (batch, cfg.enc_seq, cfg.d_model),
+                dtype=jnp.dtype(cfg.compute_dtype),
+            )
+
+        prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
+        decode = jax.jit(model.decode)
+
+        t0 = time.time()
+        logits, cache = prefill(params, pf_batch)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
+
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        out_tokens = [tok]
+        t0 = time.time()
+        for _ in range(gen_tokens - 1):
+            logits, cache = decode(params, cache, {"token": tok})
+            tok = jnp.argmax(logits, axis=-1)
+            out_tokens.append(tok)
+        tok.block_until_ready()
+        t_decode = time.time() - t0
+
+    gen = jnp.concatenate(out_tokens, axis=1)
+    return {
+        "generated": gen,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tok_s": batch * (gen_tokens - 1) / max(t_decode, 1e-9),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-tokens", type=int, default=32)
+    ap.add_argument("--strategy", default="dos")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    r = serve_loop(
+        cfg, batch=args.batch, prompt_len=args.prompt_len,
+        gen_tokens=args.gen_tokens, strategy=args.strategy,
+    )
+    print(
+        f"prefill {r['prefill_s']*1e3:.1f}ms; decode {r['decode_tok_s']:.1f} tok/s; "
+        f"sample: {r['generated'][0, :16].tolist()}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: pure-functional JAX implementations of the assigned archs."""
+
+from .zoo import Model, build
+
+__all__ = ["Model", "build"]

@@ -1,0 +1,138 @@
+"""Model zoo facade: one `Model` object per architecture config.
+
+Gives the launcher, dry-run, tests and examples a uniform surface:
+
+    model = build(cfg)
+    params = model.init(rng)
+    loss   = model.loss(params, batch)            # train shapes
+    logits, cache = model.prefill(params, batch)  # prefill shapes
+    logits, cache = model.decode(params, cache, batch)  # serve_step
+    specs  = model.input_specs(shape)             # ShapeDtypeStructs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig, ShapeConfig
+from .decoder import decoder_defs, decoder_forward, init_cache
+from .encdec import encdec_defs, encdec_forward, encdec_init_cache
+from .moe import aux_load_balance_loss
+from .params import abstract, materialize, tree_size
+
+__all__ = ["Model", "build"]
+
+
+def softmax_xent(logits, labels):
+    """Mean next-token cross-entropy; logits f32 (B, S, V)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    defs: Any  # ParamDef tree
+
+    # ---- parameters -----------------------------------------------------
+    def init(self, rng, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return materialize(self.defs, rng, dtype)
+
+    def abstract_params(self, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.param_dtype)
+        return abstract(self.defs, dtype)
+
+    @property
+    def n_params(self) -> int:
+        return tree_size(self.defs)
+
+    # ---- forward ------------------------------------------------------------
+    def _forward(self, params, tokens, *, mode, cache=None, batch=None,
+                 max_len=0, remat=False):
+        cfg = self.cfg
+        batch = batch or {}
+        if cfg.family == "encdec":
+            return encdec_forward(
+                params, tokens, cfg, mode=mode,
+                enc_frames=batch.get("enc_frames"), cache=cache,
+                max_len=max_len, remat=remat,
+            )
+        return decoder_forward(
+            params, tokens, cfg, mode=mode, cache=cache,
+            image_embeds=batch.get("image_embeds"), max_len=max_len,
+            remat=remat,
+        )
+
+    def loss(self, params, batch, *, remat: bool = False):
+        logits, _ = self._forward(
+            params, batch["tokens"], mode="train", batch=batch, remat=remat
+        )
+        loss = softmax_xent(logits, batch["labels"])
+        if self.cfg.family == "moe":
+            # load-balance aux on the first layer's router (cheap proxy)
+            first = jax.tree.map(lambda a: a[0], params["layers"])
+            x = jnp.take(params["embed"]["tok"], batch["tokens"], axis=0)
+            loss = loss + 0.01 * aux_load_balance_loss(
+                first["ffn"], x.astype(jnp.float32), self.cfg
+            )
+        return loss
+
+    def prefill(self, params, batch, *, max_len: int = 0):
+        return self._forward(
+            params, batch["tokens"], mode="prefill", batch=batch,
+            max_len=max_len,
+        )
+
+    def decode(self, params, cache, batch):
+        """One serve step: batch["token"] (B, 1) -> logits (B, 1, V)."""
+        return self._forward(params, batch["token"], mode="decode", cache=cache)
+
+    # ---- caches -----------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self.cfg.family == "encdec":
+            return encdec_init_cache(self.cfg, batch, max_len, dtype)
+        return init_cache(self.cfg, batch, max_len, dtype)
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len, dtype)
+        )
+
+    # ---- dry-run input specs ---------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input (no alloc)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.mode == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        elif shape.mode == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        else:  # decode: one new token against a seq_len cache
+            specs = {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.family == "vlm" and shape.mode != "decode":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+            )
+        if cfg.family == "encdec" and shape.mode != "decode":
+            specs["enc_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+            )
+        return specs
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family == "encdec":
+        defs = encdec_defs(cfg)
+    else:
+        defs = decoder_defs(cfg)
+    return Model(cfg=cfg, defs=defs)

@@ -1,0 +1,3 @@
+from .adamw import OptConfig, abstract_opt_state, adamw_update, init_opt_state, schedule
+
+__all__ = ["OptConfig", "abstract_opt_state", "adamw_update", "init_opt_state", "schedule"]

@@ -1,0 +1,5 @@
+"""Distribution: logical-axis sharding, pipeline, MoE-EP, compression."""
+
+from .axes import ShardingRules, current_rules, param_sharding, shard, use_rules
+
+__all__ = ["ShardingRules", "current_rules", "param_sharding", "shard", "use_rules"]

@@ -1,0 +1,229 @@
+"""Logical-axis sharding: how the paper's dataflows become mesh rules.
+
+Parameters and activations are annotated with *logical* axis names
+("embed", "heads", "mlp", ...). A ``ShardingRules`` object maps logical
+names to physical mesh axes according to the chosen dataflow strategy:
+
+- ``dos`` (paper-faithful): every weight is sharded along its GEMM
+  **contraction** axis over ``model`` — the mesh-level dOS. Each device
+  computes a K/ℓ partial sum; XLA materializes the paper's adder pile
+  as an all-reduce (or reduce-scatter when the next layer consumes a
+  sharded layout — the "optimized pile").
+- ``megatron`` (the WS/IS-in-3D analogue): column-parallel in-projs
+  (output axis sharded), row-parallel out-projs (contraction sharded) —
+  the classic pairing with one collective per block.
+- ``auto``: per-GEMM choice delegated to ``core.advisor``.
+
+FSDP ("zero") additionally shards every weight's largest remaining axis
+over ``data`` for training, so optimizer state and master weights scale
+with the full mesh.
+
+Activation constraints go through ``shard(x, kind)`` with a small
+vocabulary of activation kinds; when no rules are active this is a
+no-op so single-device tests run unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "use_rules", "current_rules", "shard", "param_sharding"]
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar("sharding_rules", default=None)
+
+# Mesh axes that carry the batch (data-parallel) dimension.
+BATCH_AXES = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    strategy: str = "dos"  # dos | megatron | zero | auto
+    fsdp: bool = True
+
+    def batch_axes(self):
+        """Mesh axes carrying the batch. The 'zero' strategy (pure
+        ZeRO-3 data parallelism — params live sharded over every axis
+        and are gathered per layer) spreads the batch over the WHOLE
+        mesh; dOS/megatron keep 'model' for tensor sharding."""
+        if self.strategy == "zero":
+            return tuple(self.mesh.axis_names)
+        return tuple(a for a in BATCH_AXES if a in self.mesh.axis_names)
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name] if name in self.mesh.axis_names else 1
+
+    # ---- activations ------------------------------------------------------
+    def act_spec(self, kind: str) -> P:
+        """dOS chains reduce-scatters: every GEMM's output lands sharded
+        on the *next* GEMM's contraction dim (residual on E, attention
+        internals on heads, MLP hidden on F) — each partial-sum pile is
+        scattered instead of fully replicated, which is both the
+        memory-lean form of the paper's adder pile and what keeps
+        per-device activations bounded. Megatron replicates the residual
+        and shards the block-internal dims (classic col/row pairing)."""
+        b = self.batch_axes() or None
+        model = "model" if "model" in self.mesh.axis_names else None
+        if self.strategy == "zero":
+            model = None  # activations purely batch-sharded
+        dos = self.strategy == "dos"
+        table = {
+            # residual stream (B, S, E): dOS keeps E sharded (the
+            # reduce-scattered adder-pile output); megatron replicates.
+            "residual": P(b, None, model if dos else None),
+            # attention activations (B, S, H, D): heads sharded in both
+            # (dOS: heads are the o-proj contraction dim).
+            "attn_heads": P(b, None, model, None),
+            # mlp hidden (B, S, F): F is the down-proj contraction dim.
+            "mlp_hidden": P(b, None, model),
+            # logits (B, S, V): vocab sharded in both strategies
+            "logits": P(b, None, model),
+            # kv cache (B, S, KVH, D)
+            "kv_cache": P(b, None, model, None),
+            # decode residual (B, 1, E)
+            "decode_residual": P(b, None, model if dos else None),
+            # ssm state (B, H, N, P)
+            "ssm_state": P(b, model, None, None),
+            # decode attention internals: q regrouped (B, 1, KVH, G, D)
+            # and per-head logits (B, KVH, G, 1, S). The D/KVH entries
+            # mirror the cache layout so the contraction stays partial
+            # (psum) instead of forcing a cache all-gather; the shard()
+            # divisibility guard drops whichever axis does not apply.
+            "decode_q_d": P(b, None, None, None, model),
+            "decode_q_h": P(b, None, model, None, None),
+            "none": P(),
+        }
+        return table[kind]
+
+    # ---- parameters ---------------------------------------------------------
+    def param_spec(self, axes: tuple, contract: int | None, out: int | None) -> P:
+        """PartitionSpec for a weight with the given logical axes.
+
+        ``contract``/``out`` are the GEMM contraction / output axis
+        indices (None for non-GEMM params such as norms and biases).
+        """
+        model = "model" if "model" in self.mesh.axis_names else None
+        if self.strategy == "zero":
+            model = None  # no tensor sharding; fsdp below shards storage
+        spec: list = [None] * len(axes)
+        if model is not None and contract is not None:
+            if self.strategy == "dos":
+                shard_idx = contract
+            elif self.strategy == "megatron":
+                # col for in-projections (role encoded by axis name), row
+                # for out-projections: out-proj contraction axes are
+                # "heads"/"mlp"/"experts_ff" style inner axes.
+                shard_idx = contract if axes[contract] in _INNER_AXES else out
+            else:  # auto: resolved upstream, defaults to dos here
+                shard_idx = contract
+            if shard_idx is not None:
+                spec[shard_idx] = model
+        # vocab embedding tables: shard vocab over model
+        if contract is None and "vocab" in axes and model is not None:
+            spec[axes.index("vocab")] = model
+        if self.fsdp:
+            data_axes = self.batch_axes()
+            if data_axes:
+                # biggest remaining axis gets the data shards (ZeRO-3)
+                free = [i for i in range(len(axes)) if spec[i] is None and axes[i] != "layers"]
+                if free:
+                    spec_idx = max(free, key=lambda i: _AXIS_WEIGHT.get(axes[i], 1))
+                    spec[spec_idx] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*spec)
+
+
+# Axes that are GEMM-inner ("row-parallel") in the megatron pairing.
+_INNER_AXES = {"heads_flat", "mlp", "expert_ff", "ssm_inner"}
+# Relative size hints for picking the FSDP axis.
+_AXIS_WEIGHT = {
+    "vocab": 100, "mlp": 50, "expert_ff": 50, "embed": 40, "heads_flat": 30,
+    "ssm_inner": 30, "experts": 20, "heads": 10, "kv_heads": 5, "head_dim": 2,
+    "state": 2,
+}
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    token = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> ShardingRules | None:
+    return _RULES.get()
+
+
+def shard(x, kind: str):
+    """Constrain an activation's sharding (no-op without active rules).
+
+    Axes whose shard count does not divide the dimension are dropped
+    (replicated) — this keeps one rule table valid across full-size and
+    smoke-test shapes.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.act_spec(kind)
+    nd = x.ndim
+    parts = list(spec)
+    if len(parts) < nd:
+        parts = parts + [None] * (nd - len(parts))
+    elif len(parts) > nd:
+        parts = parts[:nd]
+    for i, part in enumerate(parts):
+        if part is None:
+            continue
+        axes_ = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes_:
+            size *= rules.axis_size(a)
+        if size == 0 or x.shape[i] % size != 0:
+            parts[i] = None
+            # kv caches: when the head-count axis cannot take the model
+            # shards (e.g. qwen2-72b kvh=8 < 16), fall back to context-
+            # sharding the cache SEQUENCE dim — a replicated constraint
+            # here would force XLA to all-gather the whole cache every
+            # decode step, and head_dim sharding does not compose with
+            # the GQA-grouped decode einsum under GSPMD.
+            if kind == "kv_cache" and i == nd - 2 and nd >= 3:
+                msize = rules.axis_size("model")
+                if (part == "model" and parts[nd - 3] is None
+                        and x.shape[nd - 3] % msize == 0):
+                    parts[nd - 3] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*parts))
+    )
+
+
+def param_sharding(defs, rules: ShardingRules):
+    """Map a ParamDef pytree to NamedShardings."""
+    from ..models.params import ParamDef  # local import to avoid cycle
+
+    def one(d: ParamDef):
+        if not _divisible(d, rules):
+            # fall back to replicated if the shard doesn't divide
+            return NamedSharding(rules.mesh, P())
+        return NamedSharding(rules.mesh, rules.param_spec(d.axes, d.contract, d.out))
+
+    return jax.tree.map(one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _divisible(d, rules: ShardingRules) -> bool:
+    spec = rules.param_spec(d.axes, d.contract, d.out)
+    for dim, part in zip(d.shape, tuple(spec) + (None,) * (len(d.shape) - len(spec))):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= rules.axis_size(a)
+        if dim % size != 0:
+            return False
+    return True

@@ -1,0 +1,183 @@
+"""Sharding plans: map every training/serving input to a NamedSharding.
+
+``make_plan`` assembles, for a (model, shape, rules) triple, the
+abstract inputs and in/out shardings that ``jax.jit`` needs — for
+train_step (params, opt_state, batch), prefill_step and serve_step
+(params, cache, token batch). This is where decode caches get their
+placement: batch over the data axes and one head/feature dim over
+``model`` (with per-dim divisibility fallbacks, so gemma3's single KV
+head falls back to head_dim sharding, and long_500k's batch=1 falls
+back to context sharding over the sequence dim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..config import ShapeConfig
+from ..models.params import ParamDef
+from ..optim import abstract_opt_state
+from .axes import ShardingRules, param_sharding
+
+__all__ = ["Plan", "make_plan"]
+
+
+@dataclasses.dataclass
+class Plan:
+    rules: ShardingRules
+    abstract: tuple  # positional abstract inputs for .lower()
+    in_shardings: tuple
+    out_shardings: Any
+
+
+def _ns(rules, *parts):
+    return NamedSharding(rules.mesh, P(*parts))
+
+
+def _fit(rules: ShardingRules, shape, parts):
+    """Drop spec entries that do not divide the dim."""
+    parts = list(parts) + [None] * (len(shape) - len(parts))
+    for i, part in enumerate(parts):
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= rules.axis_size(a)
+        if shape[i] % size != 0:
+            parts[i] = None
+    return parts
+
+
+def batch_sharding(rules: ShardingRules, spec_tree):
+    """Token/label/frame inputs: leading dim over the data axes."""
+    b = rules.batch_axes() or None
+
+    def one(s: jax.ShapeDtypeStruct):
+        parts = _fit(rules, s.shape, [b])
+        return _ns(rules, *parts)
+
+    return jax.tree.map(one, spec_tree)
+
+
+def cache_shardings(rules: ShardingRules, abstract_cache, batch: int):
+    """Decode/prefill cache placement with divisibility fallbacks."""
+    b = rules.batch_axes() or None
+    model = "model" if "model" in rules.mesh.axis_names else None
+    dsize = 1
+    for a in rules.batch_axes():
+        dsize *= rules.axis_size(a)
+    msize = rules.axis_size("model") if model else 1
+    long_ctx = batch % max(dsize, 1) != 0  # e.g. batch == 1 at 500k
+
+    def one(path, s):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        shape = s.shape
+        nd = len(shape)
+        parts = [None] * nd
+        if name in ("length", "step") or nd <= 1:
+            return _ns(rules, *parts)
+        if name in ("k", "v") and nd >= 4:
+            # (..., B, S, KVH, HD)
+            bdim, sdim, hdim, ddim = nd - 4, nd - 3, nd - 2, nd - 1
+            if not long_ctx:
+                parts[bdim] = b
+            elif shape[sdim] % (dsize or 1) == 0:
+                parts[sdim] = b  # context-shard the cache sequence
+            if model:
+                if shape[hdim] % msize == 0:
+                    parts[hdim] = model
+                elif parts[sdim] is None and shape[sdim] % msize == 0:
+                    # context-shard the cache sequence (ring decode):
+                    # composes with GQA einsums where head_dim cannot.
+                    parts[sdim] = model
+            return _ns(rules, *_fit(rules, shape, parts))
+        # state leaves (ssm/conv/mlstm/slstm): batch dim is the first
+        # dim of size `batch` scanning from the left; shard the largest
+        # remaining dim over model.
+        bdim = None
+        for i, d in enumerate(shape):
+            if d == batch:
+                bdim = i
+                break
+        if bdim is not None and not long_ctx:
+            parts[bdim] = b
+        if model:
+            cands = [
+                i for i in range(nd)
+                if i != bdim and shape[i] % msize == 0 and shape[i] >= msize
+            ]
+            if cands:
+                parts[max(cands, key=lambda i: shape[i])] = model
+        return _ns(rules, *_fit(rules, shape, parts))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def make_plan(
+    model,
+    shape: ShapeConfig,
+    rules: ShardingRules,
+    *,
+    mode: str | None = None,
+) -> Plan:
+    """Abstract inputs + shardings for the step implied by ``shape``."""
+    mode = mode or shape.mode
+    cfg = model.cfg
+    if mode == "train":
+        ap = model.abstract_params(jnp.dtype(cfg.param_dtype))
+        ps = param_sharding(model.defs, rules)
+        aos = abstract_opt_state(ap)
+        oss = {"m": ps, "v": ps, "step": _ns(rules)}
+        specs = model.input_specs(shape)
+        bs = batch_sharding(rules, specs)
+        return Plan(
+            rules=rules,
+            abstract=(ap, aos, specs),
+            in_shardings=(ps, oss, bs),
+            out_shardings=(ps, oss, _ns(rules)),  # params, opt, loss
+        )
+
+    serve_dtype = jnp.bfloat16
+    ap = model.abstract_params(serve_dtype)
+    serve_rules = dataclasses.replace(rules, fsdp=False)
+    ps = param_sharding(model.defs, serve_rules)
+    specs = model.input_specs(shape)
+    bs = batch_sharding(rules, specs)
+    b = shape.global_batch
+
+    if mode == "prefill":
+        # logits + cache out
+        ac = model.abstract_cache(b, shape.seq_len, serve_dtype)
+        cs = cache_shardings(rules, ac, b)
+        logits_shape = (b, shape.seq_len, cfg.vocab)
+        logits_s = _ns(rules, *_fit(
+            rules, logits_shape, [rules.batch_axes() or None, None, "model"]
+        ))
+        return Plan(
+            rules=rules,
+            abstract=(ap, specs),
+            in_shardings=(ps, bs),
+            out_shardings=(logits_s, cs),
+        )
+
+    # decode / long-context decode
+    ac = model.abstract_cache(b, shape.seq_len, serve_dtype)
+    cs = cache_shardings(rules, ac, b)
+    long_ctx = b == 1
+    logits_parts = _fit(
+        rules, (b, 1, cfg.vocab),
+        [None if long_ctx else (rules.batch_axes() or None), None, "model"],
+    )
+    logits_s = _ns(rules, *logits_parts)
+    return Plan(
+        rules=rules,
+        abstract=(ap, ac, specs),
+        in_shardings=(ps, cs, bs),
+        out_shardings=(logits_s, cs),
+    )

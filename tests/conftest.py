@@ -1,0 +1,40 @@
+"""Shared test helpers.
+
+IMPORTANT: no XLA_FLAGS here — unit/smoke tests must see the real
+single-device environment. Tests that need a multi-device mesh spawn a
+subprocess with --xla_force_host_platform_device_count (see
+run_multidevice).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 900):
+    """Run `code` in a fresh python with N fake CPU devices; returns stdout.
+    The snippet should print results; raise/assert inside it for failure."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO,
+    )
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+        )
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+
+    return np.random.default_rng(0)

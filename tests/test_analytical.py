@@ -1,0 +1,87 @@
+"""Paper Eqs. 1-2 and the array-shape/tier optimizers (property-based)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytical import (
+    mac_threshold, optimal_tiers, optimize_array_2d, optimize_array_3d,
+    speedup_3d, tau_2d, tau_3d,
+)
+
+dims = st.integers(min_value=1, max_value=2048)
+small = st.integers(min_value=1, max_value=64)
+
+
+def test_eq1_literal():
+    # (2R + C + K - 2) * ceil(M/R) * ceil(N/C)
+    assert tau_2d(64, 300, 128, 16, 8) == (32 + 8 + 300 - 2) * 4 * 16
+
+
+def test_eq2_literal():
+    assert tau_3d(64, 300, 128, 16, 8, 3) == (32 + 8 + (100 + 2) - 2) * 4 * 16
+
+
+@given(M=dims, K=dims, N=dims, R=small, C=small)
+@settings(max_examples=200, deadline=None)
+def test_one_tier_recovers_2d(M, K, N, R, C):
+    assert tau_3d(M, K, N, R, C, 1) == tau_2d(M, K, N, R, C)
+
+
+@given(M=dims, K=dims, N=dims, R=small, C=small, l=st.integers(2, 16))
+@settings(max_examples=200, deadline=None)
+def test_tau_monotonic_in_k(M, K, N, R, C, l):
+    assert tau_3d(M, K + 64, N, R, C, l) >= tau_3d(M, K, N, R, C, l)
+
+
+@given(M=dims, K=dims, N=dims, n=st.sampled_from([2**10, 2**14, 2**18]),
+       l=st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_optimizer_respects_budget(M, K, N, n, l):
+    plan = optimize_array_3d(M, K, N, n, l)
+    assert plan.n_macs_used <= n
+    assert plan.tiers == l
+    # optimizer never beats the brute tau at its own (R, C)
+    assert plan.cycles == tau_3d(M, K, N, plan.rows, plan.cols, l)
+
+
+def test_paper_headline_speedups():
+    """Fig. 5: up to ~9.16x at 12 tiers / 2^18 MACs / K=12100; ~1.93x at
+    2 tiers. Our optimizer finds slightly better 2D baselines, so we
+    accept a band around the paper's numbers."""
+    s12 = speedup_3d(64, 12100, 147, 2**18, 12)
+    s2 = speedup_3d(64, 12100, 147, 2**18, 2)
+    assert 8.5 <= s12 <= 10.5, s12
+    assert 1.8 <= s2 <= 2.1, s2
+
+
+def test_small_k_small_macs_loses():
+    """Paper Sec. IV-A: K=255 with 2^12 MACs -> ~51% performance LOSS."""
+    s = speedup_3d(64, 255, 147, 2**12, 12)
+    assert s < 0.75, s
+
+
+@given(M=st.integers(2, 16), N=st.integers(2, 16))
+@settings(max_examples=50, deadline=None)
+def test_threshold_matches_paper(M, N):
+    """3D cannot win when the MAC budget is below M*N (N_min = M*N),
+    for large-K workloads (paper Fig. 6). The paper's threshold is an
+    empirical statement over smooth sweeps: hypothesis found that for
+    *unaligned* M, N (e.g. 9x9, 33x...) 2D fold quantization lets a
+    sub-threshold 3D array win by up to ~1.3x — a real refinement of
+    the paper's claim, recorded here by testing the aligned regime
+    (multiples of 16, as plotted) strictly and documenting the ragged
+    exception in EXPERIMENTS.md §Paper."""
+    M, N = 16 * M, 16 * N
+    n_macs = mac_threshold(M, N) // 2
+    s = speedup_3d(M, 8192, N, n_macs, 4)
+    assert s <= 1.0 + 1e-9, (M, N, s)
+
+
+def test_optimal_tiers_grow_with_budget():
+    """Fig. 7: larger MAC budgets favor more tiers (median shift)."""
+    wl = [(64, 12100, 147), (128, 4096, 2048), (320, 4096, 3072)]
+    med = []
+    for budget in (2**14, 2**18):
+        med.append(np.median([optimal_tiers(m, k, n, budget)[0] for m, k, n in wl]))
+    assert med[1] >= med[0]

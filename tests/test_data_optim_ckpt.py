@@ -1,0 +1,74 @@
+"""Substrate tests: data determinism, optimizer, checkpoint roundtrip."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import OptConfig, adamw_update, init_opt_state, schedule
+from repro.checkpoint import checkpointer
+
+
+def test_data_deterministic_and_restart_safe():
+    cfg = DataConfig(vocab=101, seq_len=16, global_batch=4, seed=7)
+    d1 = SyntheticLM(cfg, process_index=0, process_count=1)
+    d2 = SyntheticLM(cfg, process_index=0, process_count=1)
+    b1, b2 = d1.batch(5), d2.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch(5)["tokens"], d1.batch(6)["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=8, seed=1)
+    p0 = SyntheticLM(cfg, process_index=0, process_count=2).batch(0)
+    p1 = SyntheticLM(cfg, process_index=1, process_count=2).batch(0)
+    assert p0["tokens"].shape == (4, 8)
+    assert not np.array_equal(p0["tokens"], p1["tokens"])
+
+
+def test_data_is_learnable_signal():
+    cfg = DataConfig(vocab=101, seq_len=64, global_batch=4, seed=0, noise=0.0)
+    b = SyntheticLM(cfg, 0, 1).batch(0)
+    # labels follow the affine rule from tokens
+    np.testing.assert_array_equal(
+        b["labels"][:, 0], (5 * b["tokens"][:, 0] + 17) % 101
+    )
+
+
+def test_adamw_decreases_quadratic():
+    p = {"w": jnp.ones((4,)) * 5.0}
+    s = init_opt_state(p)
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    for _ in range(50):
+        g = {"w": 2 * p["w"]}  # d/dw (w^2)
+        p, s, _ = adamw_update(p, g, s, cfg)
+    assert float(jnp.abs(p["w"]).max()) < 1.0
+
+
+def test_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(schedule(cfg, 0)) == 0.0
+    assert abs(float(schedule(cfg, 10)) - 1.0) < 0.11
+    assert float(schedule(cfg, 100)) <= 0.11
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6).reshape(2, 3), "b": {"c": np.float32(3.5)}}
+    checkpointer.save(tmp_path, 7, tree)
+    assert checkpointer.latest_step(tmp_path) == 7
+    back = checkpointer.restore(tmp_path, 7, tree)
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    assert back["b"]["c"] == tree["b"]["c"]
+
+
+def test_checkpoint_retention_and_async(tmp_path):
+    tree = {"x": np.ones((4,))}
+    for s in (1, 2, 3, 4, 5):
+        checkpointer.save(tmp_path, s, tree, keep=2)
+    assert checkpointer.latest_step(tmp_path) == 5
+    import pathlib
+    steps = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert len(steps) == 2
+    t = checkpointer.save_async(tmp_path, 6, tree)
+    checkpointer.wait_for_saves()
+    assert checkpointer.latest_step(tmp_path) == 6

@@ -1,0 +1,52 @@
+"""dOS matmul Pallas kernel vs pure-jnp oracle (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dos_matmul import dos_matmul, dos_matmul_ref, pick_blocks
+
+SHAPES = [
+    (128, 256, 128), (256, 512, 384), (100, 300, 77), (8, 8192, 128),
+    (1, 512, 512), (384, 128, 1024),
+]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_matches_oracle(m, k, n, dtype):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype=dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype=dtype)
+    ref = np.asarray(dos_matmul_ref(a, b, out_dtype="float32"))
+    out = np.asarray(dos_matmul(a, b, interpret=True, out_dtype="float32"))
+    tol = 2e-2 if dtype == "bfloat16" else 1e-4
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * np.abs(ref).max())
+
+
+def test_tier_accumulation_order():
+    """Tier-split accumulation equals the monolithic product (f32)."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(64, 512)), dtype="float32")
+    b = jnp.asarray(rng.normal(size=(512, 64)), dtype="float32")
+    want = np.asarray(a) @ np.asarray(b)
+    for tiers in (1, 2, 4, 8):
+        out = np.asarray(dos_matmul_ref(a, b, n_tiers=tiers, out_dtype="float32"))
+        # tier-split changes f32 summation order; tolerance scales with
+        # the output magnitude (cancellation makes rtol misleading).
+        np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-4 * np.abs(want).max())
+
+
+def test_batched_lead_dims():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(2, 16, 128)), dtype="float32")
+    b = jnp.asarray(rng.normal(size=(128, 64)), dtype="float32")
+    out = np.asarray(dos_matmul(a, b, interpret=True))
+    ref = np.einsum("bik,kn->bin", np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_pick_blocks_vmem_budget():
+    bm, bn, bk = pick_blocks(4096, 4096, 8192)
+    assert bm % 8 == 0 and bn % 128 == 0
+    assert 2 * (bm * bk + bk * bn) + 4 * bm * bn <= 8 * 2**20

@@ -1,0 +1,58 @@
+"""PPA models reproduce the paper's Table II, Fig. 8 trends, Fig. 9 bands."""
+
+import pytest
+
+from repro.core.ppa import (
+    area_normalized_speedup, array_power, table2_setup, thermal_report,
+)
+from repro.core.ppa.constants import THERMAL_BUDGET_C
+
+PAPER_TABLE2 = {"2d": (6.61, 14.99), "tsv": (6.39, 14.41), "miv": (6.26, 14.14)}
+
+
+@pytest.mark.parametrize("name", ["2d", "tsv", "miv"])
+def test_table2_total_power(name):
+    r = array_power(**table2_setup()[name])
+    want_total, want_peak = PAPER_TABLE2[name]
+    assert abs(r.total_w - want_total) / want_total < 0.01, r.total_w
+    assert abs(r.peak_w - want_peak) / want_peak < 0.03, r.peak_w
+
+
+def test_power_ordering():
+    rs = {n: array_power(**kw) for n, kw in table2_setup().items()}
+    assert rs["2d"].total_w > rs["tsv"].total_w > rs["miv"].total_w
+    # vertical links: TSV burns more than MIV (10fF vs 0.2fF)
+    assert rs["tsv"].components["vlink_w"] > rs["miv"].components["vlink_w"]
+
+
+def test_fig9_two_tier_band():
+    """Paper: 2-tier face-to-face gives 1.19x-1.97x perf/area."""
+    t = area_normalized_speedup(64, 12100, 147, 2**18, 2, "tsv")
+    m = area_normalized_speedup(64, 12100, 147, 2**18, 2, "miv")
+    assert 1.1 <= t <= 1.3, t
+    assert 1.8 <= m <= 2.1, m
+
+
+def test_fig9_small_macs_tsv_loses():
+    """Paper: at 4096 MACs the TSV 3D-IC is WORSE per area than 2D."""
+    assert area_normalized_speedup(64, 12100, 147, 4096, 4, "tsv") < 1.0
+
+
+def test_fig9_miv_beats_tsv():
+    for l in (2, 4, 8):
+        assert area_normalized_speedup(64, 12100, 147, 2**18, l, "miv") > \
+            area_normalized_speedup(64, 12100, 147, 2**18, l, "tsv")
+
+
+def test_thermal_trends():
+    """Fig. 8: 3D hotter than 2D; MIV hotter than TSV; hotter with more
+    MACs; everything within the thermal budget."""
+    t2 = thermal_report(16384, 1, "2d")
+    tt = thermal_report(16384, 3, "tsv")
+    tm = thermal_report(16384, 3, "miv")
+    assert t2.t_max_c < tt.t_max_c < tm.t_max_c
+    assert all(r.within_budget for r in (t2, tt, tm))
+    small = thermal_report(4096, 3, "tsv")
+    big = thermal_report(65536, 3, "tsv")
+    assert small.t_max_c < big.t_max_c
+    assert big.t_max_c < THERMAL_BUDGET_C

@@ -1,0 +1,36 @@
+"""HLO collective parsing + roofline arithmetic."""
+
+from repro.analysis.roofline import parse_collectives, roofline_from_artifact, CollectiveStats
+
+HLO = """
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%dot), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = bf16[32,256]{1,0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[8,64]{1,0} reduce-scatter(%y), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  %cp = bf16[4,4]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %unrelated = f32[2,2]{1,0} add(%a, %b)
+"""
+
+
+def test_parse_collectives():
+    c = parse_collectives(HLO)
+    assert c.counts == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                        "collective-permute": 1}
+    ar = 16 * 128 * 4 * 2 * 3 / 4        # bytes * 2(g-1)/g, g=4
+    ag = 32 * 256 * 2 * 3 / 4            # bytes * (g-1)/g, g=4
+    rs = 8 * 64 * 4 * 3                  # bytes * (g-1),   g=4
+    cp = 4 * 4 * 2
+    assert abs(c.wire_bytes - (ar + ag + rs + cp)) < 1e-6
+
+
+def test_roofline_terms():
+    coll = CollectiveStats(wire_bytes=50e9, result_bytes=0, counts={}, by_op_bytes={})
+    r = roofline_from_artifact(
+        arch="a", shape="s", mesh_name="m", n_chips=256,
+        cost={"flops": 197e12, "bytes accessed": 819e9}, coll=coll,
+        model_flops=197e12 * 256 * 0.5,
+    )
+    assert abs(r.compute_s - 1.0) < 1e-6
+    assert abs(r.memory_s - 1.0) < 1e-6
+    assert abs(r.collective_s - 1.0) < 1e-6
+    assert r.dominant in ("compute", "memory", "collective")
+    assert abs(r.useful_ratio - 0.5) < 1e-6
