@@ -2,6 +2,8 @@
 
 Each ``bench_*`` returns (name, us_per_call, derived) rows where
 ``derived`` is the reproduced headline number next to the paper's claim.
+The DSE figures (5-7, Table I) route through the batched evaluation
+engine — each is a single ``DesignGrid`` evaluation.
 """
 
 from __future__ import annotations
@@ -10,8 +12,9 @@ import time
 
 import numpy as np
 
-from repro.core.analytical import optimal_tiers, speedup_3d, tau_2d, tau_3d
+from repro.core.analytical import tau_2d, tau_3d
 from repro.core.dse import PAPER_WORKLOADS, fig5_sweep, fig6_sweep, fig7_scatter
+from repro.core.engine import DesignGrid, evaluate, optimal_tiers_batched
 from repro.core.ppa import (
     area_normalized_speedup, array_power, table2_setup, thermal_report,
 )
@@ -29,9 +32,9 @@ def bench_fig5():
     """Speedup vs tier count / MAC budget / K. Paper: up to 9.16x at 12
     tiers, 1.93x at 2 tiers (K=12100, 2^18 MACs); losses for small K."""
     (tiers, out), us = _timed(lambda: fig5_sweep())
-    s12 = speedup_3d(64, 12100, 147, 2**18, 12)
-    s2 = speedup_3d(64, 12100, 147, 2**18, 2)
-    worst = speedup_3d(64, 255, 147, 2**12, 12)
+    s12 = out[(2**18, 12100)][tiers.index(12)]
+    s2 = out[(2**18, 12100)][tiers.index(2)]
+    worst = out[(2**12, 255)][tiers.index(12)]
     rows = [
         ("fig5/speedup_12tier_2^18_K12100", us, f"{s12:.2f}x (paper 9.16x)"),
         ("fig5/speedup_2tier", us, f"{s2:.2f}x (paper 1.93x)"),
@@ -72,13 +75,18 @@ def bench_fig7():
 
 
 def bench_tab1():
-    """Table I workloads: 3D-vs-2D speedup at 2^16 MACs, best tier<=16."""
-    rows = []
+    """Table I workloads: 3D-vs-2D speedup at 2^16 MACs, best tier<=16 —
+    one batched tier search plus one 2D-baseline evaluation."""
     t0 = time.perf_counter()
-    for name, (m, k, n) in PAPER_WORKLOADS.items():
-        l, cyc = optimal_tiers(m, k, n, 2**16)
-        s = speedup_3d(m, k, n, 2**16, l)
-        rows.append((f"tab1/{name}", 0.0, f"l*={l} speedup={s:.2f}x"))
+    wl = list(PAPER_WORKLOADS.values())
+    best, best_cycles = optimal_tiers_batched(wl, [2**16])
+    base = evaluate(DesignGrid.product(wl, [2**16], [1]), metrics=("perf",))
+    speedup = base.cycles[:, 0] / best_cycles[:, 0]
+    rows = [
+        (f"tab1/{name}", 0.0,
+         f"l*={int(best[i, 0])} speedup={speedup[i]:.2f}x")
+        for i, name in enumerate(PAPER_WORKLOADS)
+    ]
     us = (time.perf_counter() - t0) / len(rows) * 1e6
     return [(n, us, d) for n, _, d in rows]
 

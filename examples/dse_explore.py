@@ -5,6 +5,8 @@ the optimal tier count, speedup, power/area/thermal for the chosen
 config, and how the same decision maps onto a TPU mesh axis (advisor).
 
 Run:  PYTHONPATH=src python examples/dse_explore.py --m 128 --k 8192 --n 512
+Add --pareto to print the latency/area/power Pareto frontier over the
+whole (budget x tier) grid via one batched engine call.
 """
 
 import argparse
@@ -14,6 +16,27 @@ from repro.core.analytical import optimal_tiers, optimize_array_2d, optimize_arr
 from repro.core.ppa import area_normalized_speedup, array_power, thermal_report
 
 
+def pareto_study(M, K, N):
+    """Latency-area-power frontier over budgets x tiers (Sec. IV-C/D)."""
+    from repro.core.engine import DesignGrid, evaluate
+
+    budgets = [2**p for p in range(12, 19)]
+    tiers = range(1, 17)
+    grid = DesignGrid.product([(M, K, N)], budgets, tiers)
+    res = evaluate(grid)
+    mask = res.pareto_mask(("cycles", "area_um2", "power_w"))[0]
+    print(f"\nPareto frontier ({mask.sum()}/{mask.size} points survive):")
+    print("  macs     tiers  RxC        cycles      area mm2  power W  T_max C")
+    for p in mask.nonzero()[0]:
+        b = grid.mac_budgets[p]
+        print(
+            f"  2^{int(b).bit_length()-1:<6} {grid.tiers[p]:<6} "
+            f"{res.rows[0, p]}x{res.cols[0, p]:<8} {res.cycles[0, p]:<11.0f} "
+            f"{res.area_um2[0, p]*1e-6:<9.2f} {res.power_w[0, p]:<8.2f} "
+            f"{res.t_max_c[0, p]:.0f}"
+        )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--m", type=int, default=64)
@@ -21,6 +44,8 @@ def main():
     ap.add_argument("--n", type=int, default=147)
     ap.add_argument("--macs", type=int, default=2**16)
     ap.add_argument("--mesh-axis", type=int, default=16)
+    ap.add_argument("--pareto", action="store_true",
+                    help="engine-backed latency/area/power Pareto frontier")
     args = ap.parse_args()
     M, K, N, budget = args.m, args.k, args.n, args.macs
 
@@ -42,6 +67,9 @@ def main():
     for s in score_strategies(GemmShard(M=M, K=K, N=N, axis=args.mesh_axis)):
         print(f"  {s.name:10s} compute {s.compute_s*1e6:9.2f}us "
               f"coll {s.collective_s*1e6:9.2f}us total {s.total_s*1e6:9.2f}us")
+
+    if args.pareto:
+        pareto_study(M, K, N)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
-"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
-the artifacts in experiments/dryrun/.
+"""Generate the §Dry-run, §Roofline and §DSE sections of EXPERIMENTS.md.
 
 Usage: PYTHONPATH=src python experiments/make_report.py
-Writes experiments/dryrun_section.md and experiments/roofline_section.md
-(EXPERIMENTS.md includes their content verbatim).
+Writes experiments/dryrun_section.md, experiments/roofline_section.md
+(from the artifacts in experiments/dryrun/) and experiments/
+dse_section.md (recomputed live through the batched evaluation engine:
+one ``DesignGrid`` call covering every Table-I workload x budget x tier
+with runtime, power, area and thermal columns). EXPERIMENTS.md includes
+their content verbatim.
 """
 
 from __future__ import annotations
@@ -104,10 +107,51 @@ def _note(a):
     return "near roofline: block-size/layout tuning only"
 
 
+def dse_section(mac_budgets=(2**14, 2**16, 2**18), max_tiers=16):
+    """Engine-backed DSE summary: per Table-I workload x MAC budget, the
+    optimal tier count with its speedup, power, perf/area and T_max —
+    all from a single batched ``evaluate()`` over the full grid."""
+    import numpy as np
+
+    from repro.core.dse import PAPER_WORKLOADS
+    from repro.core.engine import DesignGrid, evaluate
+
+    names = list(PAPER_WORKLOADS)
+    wl = [PAPER_WORKLOADS[n] for n in names]
+    grid = DesignGrid.product(wl, mac_budgets, range(1, max_tiers + 1))
+    res = evaluate(grid)
+    W, B, T = len(wl), len(mac_budgets), max_tiers
+    cyc = res.cycles.reshape(W, B, T)
+    best = np.argmin(cyc, axis=2)  # optimal tier index per (workload, budget)
+
+    def pick(arr):
+        return np.take_along_axis(arr.reshape(W, B, T), best[:, :, None], 2)[:, :, 0]
+
+    speed = pick(res.speedup)
+    power = pick(res.power_w)
+    ans = pick(res.area_norm_speedup)
+    tmax = pick(res.t_max_c)
+    lines = [
+        "### Engine DSE summary (Table-I workloads, dOS, TSV)",
+        "",
+        "| workload | MACs | l* | speedup | power W | perf/area | T_max C |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for wi, name in enumerate(names):
+        for bi, b in enumerate(mac_budgets):
+            lines.append(
+                f"| {name} | 2^{int(np.log2(b))} | {best[wi, bi] + 1} "
+                f"| {speed[wi, bi]:.2f}x | {power[wi, bi]:.2f} "
+                f"| {ans[wi, bi]:.2f}x | {tmax[wi, bi]:.0f} |"
+            )
+    return "\n".join(lines) + "\n"
+
+
 def main():
     arts = load()
     (HERE / "dryrun_section.md").write_text(dryrun_section(arts))
     (HERE / "roofline_section.md").write_text(roofline_section(arts))
+    (HERE / "dse_section.md").write_text(dse_section())
     # machine-readable summary for the hillclimb
     rows = []
     for (arch, shape, mesh, strat), a in arts.items():

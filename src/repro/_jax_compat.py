@@ -1,0 +1,63 @@
+"""Shims for jax API drift (0.4.x image vs >= 0.5/0.7 APIs).
+
+Every version-dependent lookup lives here so a future jax bump is a
+one-file change: `shard_map`, Pallas `CompilerParams`,
+`make_mesh(axis_types=...)`, `lax.pcast`, and the `cost_analysis()`
+return shape.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = [
+    "shard_map",
+    "pallas_tpu_compiler_params",
+    "make_mesh",
+    "pcast",
+    "unwrap_cost_analysis",
+]
+
+# shard_map: top-level `jax.shard_map` since ~0.6; experimental before,
+# where it also lacks replication rules for checkpoint_name etc. — so
+# the fallback skips the (new-jax-only) replication check.
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def shard_map(f, **kw):
+        kw.setdefault("check_rep", False)
+        return _experimental_shard_map(f, **kw)
+
+
+def pallas_tpu_compiler_params():
+    """`pltpu.CompilerParams`, named `TPUCompilerParams` before jax 0.5."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types where supported.
+
+    jax < 0.5 has no AxisType / axis_types kwarg; Auto is the default
+    behavior there, so omitting it is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def pcast(x, axes, to):
+    """`jax.lax.pcast`, identity on jax < 0.7 (no varying-type system)."""
+    fn = getattr(jax.lax, "pcast", None)
+    return x if fn is None else fn(x, axes, to=to)
+
+
+def unwrap_cost_analysis(cost):
+    """jax < 0.5 wraps the compiled cost dict in a single-element list."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0]
+    return cost

@@ -3,12 +3,17 @@
 - ``analytical``: Eqs. 1-2 runtime model + array-shape/tier optimizers.
 - ``dataflow``: OS/WS/IS/dOS descriptors + switching activities.
 - ``systolic``: cycle-level functional simulator (validates dOS).
-- ``dse``: the paper's design-space sweeps (Figs. 5-7).
-- ``ppa``: power / area / thermal models (Table II, Figs. 8-9).
-- ``advisor``: the DSE generalized to TPU-mesh sharding choices.
+- ``engine``: batched design-space evaluation engine (perf + PPA in one
+  vectorized pass over whole workload x design grids).
+- ``dse``: the paper's design-space sweeps (Figs. 5-7), thin wrappers
+  over the engine.
+- ``ppa``: power / area / thermal models (Table II, Figs. 8-9), with
+  batched entry points the engine consumes.
+- ``advisor``: the DSE generalized to TPU-mesh sharding choices, ranked
+  through the engine.
 """
 
-from . import advisor, analytical, dataflow, dse, ppa, systolic
+from . import advisor, analytical, dataflow, dse, engine, ppa, systolic
 from .analytical import (
     GEMM,
     ArrayPlan,
@@ -16,12 +21,22 @@ from .analytical import (
     optimal_tiers,
     optimize_array_2d,
     optimize_array_3d,
+    optimize_rc_batched,
     speedup_3d,
     tau_2d,
     tau_3d,
+    tau_is,
+    tau_ws,
 )
-from .advisor import GemmShard, choose_sharding, score_strategies
-from .dataflow import DOS, IS, OS, WS, dos_activity
+from .advisor import GemmShard, choose_sharding, rank_candidates, score_strategies
+from .dataflow import DOS, IS, OS, WS, activity_batched, dos_activity
+from .engine import (
+    DesignGrid,
+    EvalResult,
+    evaluate,
+    optimal_tiers_batched,
+    pareto_frontier,
+)
 from .systolic import simulate_dos_3d, simulate_os_2d
 
 __all__ = [
@@ -29,6 +44,7 @@ __all__ = [
     "analytical",
     "dataflow",
     "dse",
+    "engine",
     "ppa",
     "systolic",
     "GEMM",
@@ -37,17 +53,27 @@ __all__ = [
     "optimal_tiers",
     "optimize_array_2d",
     "optimize_array_3d",
+    "optimize_rc_batched",
     "speedup_3d",
     "tau_2d",
     "tau_3d",
+    "tau_is",
+    "tau_ws",
     "GemmShard",
     "choose_sharding",
+    "rank_candidates",
     "score_strategies",
     "DOS",
     "IS",
     "OS",
     "WS",
+    "activity_batched",
     "dos_activity",
+    "DesignGrid",
+    "EvalResult",
+    "evaluate",
+    "optimal_tiers_batched",
+    "pareto_frontier",
     "simulate_dos_3d",
     "simulate_os_2d",
 ]

@@ -21,6 +21,12 @@ The advisor scores each strategy with a roofline-style cost model
 returns the winner. The paper's threshold ``N_macs > M*N`` reappears
 naturally: K-sharding wins when the per-device output tile M*N is too
 small to fill the device (e.g. decode GEMMs) and K is large.
+
+The scoring itself lives in the batched evaluation engine
+(``core.engine.score_mesh_strategies``): ``rank_candidates`` costs a
+whole batch of GEMMs x all four strategies in one vectorized engine
+call, and the scalar ``score_strategies``/``choose_sharding`` are its
+batch-of-one wrappers.
 """
 
 from __future__ import annotations
@@ -28,16 +34,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
+from .engine import ICI_HOP_LATENCY_S, MESH_STRATEGIES, score_mesh_strategies
 from .ppa import constants as C
 
-__all__ = ["GemmShard", "score_strategies", "choose_sharding", "Strategy"]
+__all__ = [
+    "GemmShard",
+    "score_strategies",
+    "choose_sharding",
+    "rank_candidates",
+    "Strategy",
+]
 
 _BF16 = 2  # bytes
-#: per-hop ICI latency. This is where the paper's (l-1) *serial* adder
-#: term survives on a mesh: a ring collective over an axis of size l
-#: costs ~2(l-1) latency hops regardless of payload, so the dOS total is
-#: convex in l exactly like Eq. 2.
-ICI_HOP_LATENCY_S = 1e-6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,16 +77,6 @@ class GemmShard:
         return 2.0 * self.M * self.K * self.N
 
 
-def _ring_allreduce_s(nbytes: float, axis: int, bw: float) -> float:
-    """Ring all-reduce: 2(l-1)/l of the buffer over the slowest link,
-    plus 2(l-1) serial latency hops (the paper's adder pile)."""
-    return 2.0 * (axis - 1) / axis * nbytes / bw + 2 * (axis - 1) * ICI_HOP_LATENCY_S
-
-
-def _ring_allgather_s(nbytes_shard: float, axis: int, bw: float) -> float:
-    return (axis - 1) * nbytes_shard / bw + (axis - 1) * ICI_HOP_LATENCY_S
-
-
 def score_strategies(
     g: GemmShard,
     flops_per_s: float = C.TPU_PEAK_FLOPS_BF16,
@@ -86,44 +86,46 @@ def score_strategies(
 ) -> list[Strategy]:
     """Cost each way of mapping the GEMM onto one mesh axis of size ℓ.
 
-    The compute term includes the paper's *fill/quantization* effect:
-    a per-device output tile smaller than the MXU tile (128x128) wastes
-    the systolic array exactly like the paper's ceil(M/R)ceil(N/C)
-    rounding — this is how N_macs > M*N re-emerges at chip level.
+    Batch-of-one wrapper over the engine's vectorized scoring
+    (``core.engine.score_mesh_strategies``); see there for the model.
     """
-    L = g.axis
-    b = g.bytes_per_el
-    out: list[Strategy] = []
+    scores = score_mesh_strategies(
+        g.M, g.K, g.N, g.axis,
+        bytes_per_el=g.bytes_per_el,
+        flops_per_s=flops_per_s,
+        hbm_bw=hbm_bw,
+        ici_bw=ici_bw,
+        mxu_tile=mxu_tile,
+    )
+    return [
+        Strategy(
+            name,
+            float(np.asarray(scores[name]["compute_s"]).reshape(-1)[0]),
+            float(np.asarray(scores[name]["memory_s"]).reshape(-1)[0]),
+            float(np.asarray(scores[name]["collective_s"]).reshape(-1)[0]),
+        )
+        for name in MESH_STRATEGIES
+    ]
 
-    def eff(m, n, k):
-        """MXU efficiency from tile quantization (ceil rounding)."""
-        um = -(-m // mxu_tile) * mxu_tile
-        un = -(-n // mxu_tile) * mxu_tile
-        uk = -(-k // 8) * 8
-        return (m * n * k) / (um * un * uk)
 
-    def compute_t(m, n, k):
-        e = max(eff(m, n, k), 1e-6)
-        return 2.0 * m * n * k / (flops_per_s * e) / 1.0
+def rank_candidates(workloads, axis, **kw):
+    """Rank all four mesh strategies for a whole batch of GEMMs in one
+    engine call.
 
-    def memory_t(m, n, k):
-        return b * (m * k + k * n + m * n) / hbm_bw
-
-    # replicate: every device does the whole thing (no collective).
-    out.append(Strategy("replicate", compute_t(g.M, g.N, g.K), memory_t(g.M, g.N, g.K), 0.0))
-    # shard_M (IS-in-3D / data parallel): A row-sharded; B replicated.
-    mL = -(-g.M // L)
-    out.append(Strategy("shard_M", compute_t(mL, g.N, g.K), memory_t(mL, g.N, g.K), 0.0))
-    # shard_N (WS-in-3D / megatron column-parallel): B col-sharded; the
-    # next layer usually needs the full activation -> all-gather output.
-    nL = -(-g.N // L)
-    coll_n = _ring_allgather_s(b * g.M * nL, L, ici_bw)
-    out.append(Strategy("shard_N", compute_t(g.M, nL, g.K), memory_t(g.M, nL, g.K), coll_n))
-    # shard_K (dOS): partial sums all-reduced — the paper's adder pile.
-    kL = -(-g.K // L)
-    coll_k = _ring_allreduce_s(b * g.M * g.N, L, ici_bw)
-    out.append(Strategy("shard_K", compute_t(g.M, g.N, kL), memory_t(g.M, g.N, kL), coll_k))
-    return out
+    ``workloads`` is an (n, 3) array-like of (M, K, N) rows; ``axis`` is
+    the mesh-axis size (scalar or (n,)). Returns ``(names, totals)``:
+    ``names`` — (n,) array of winning strategy names, ``totals`` — (n,
+     4) float64 of total seconds per strategy, columns ordered as
+    ``engine.MESH_STRATEGIES``.
+    """
+    wl = np.atleast_2d(np.asarray(workloads, dtype=np.int64))
+    scores = score_mesh_strategies(wl[:, 0], wl[:, 1], wl[:, 2], axis, **kw)
+    totals = np.stack(
+        [np.broadcast_to(scores[n]["total_s"], (wl.shape[0],)) for n in MESH_STRATEGIES],
+        axis=1,
+    )
+    names = np.asarray(MESH_STRATEGIES)[np.argmin(totals, axis=1)]
+    return names, totals
 
 
 def choose_sharding(g: GemmShard, **kw) -> Strategy:

@@ -26,9 +26,19 @@ import dataclasses
 
 import numpy as np
 
-from .analytical import _ceil_div
+from .analytical import _ceil_div, tau_is, tau_ws
 
-__all__ = ["Dataflow", "OS", "WS", "IS", "DOS", "Activity", "dos_activity"]
+__all__ = [
+    "Dataflow",
+    "OS",
+    "WS",
+    "IS",
+    "DOS",
+    "DATAFLOWS",
+    "Activity",
+    "dos_activity",
+    "activity_batched",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +64,9 @@ IS = Dataflow("IS", ("M", "K"), ("N",), None, "A", False)
 #: The paper's contribution: K split across tiers with cross-tier reduction.
 DOS = Dataflow("dOS", ("M", "N"), ("K/l",), "K", "output", True)
 
+#: Engine-facing registry: lower-case key -> descriptor.
+DATAFLOWS = {"os": OS, "ws": WS, "is": IS, "dos": DOS}
+
 
 @dataclasses.dataclass(frozen=True)
 class Activity:
@@ -75,47 +88,62 @@ class Activity:
     mac_ops_total: float
 
 
-def dos_activity(M, K, N, R, C, tiers) -> Activity:
-    """Activity factors for dOS on an l-tier (R x C)-per-tier array.
+def activity_batched(M, K, N, R, C, tiers, dataflow: str = "dos") -> Activity:
+    """Batched activity factors for one dataflow over arrays of designs.
 
-    For tiers == 1 this is plain OS on a 2D array. Derivation (per fold
-    of full tiles, averaged over all folds):
+    All arguments broadcast; the returned ``Activity`` carries float64
+    arrays of the broadcast shape (the scalar ``dos_activity`` is the
+    batch-of-one special case). Derivation for dOS (per fold of full
+    tiles, averaged over all folds):
 
     - MAC-ops: every output element needs K multiply-accumulates, spread
       over ``l`` tiers; per fold the tile does R*C*ceil(K/l) ops *per
       tier*.
     - Horizontal hops: an element of A traverses up to C PEs rightward,
-      an element of B traverses up to R PEs downward (in-plane). Per
-      fold per tier: R*Kl elements x C hops + Kl*C elements x R hops
-      = 2*R*C*Kl word-hops over ~2*R*C in-plane links.
+      an element of B traverses up to R PEs downward (in-plane). Every
+      useful MAC-op implies one A-hop and one B-hop arriving at that PE,
+      so in-plane word-hops ~= 2 * mac_ops over ~2*R*C*l links.
     - Vertical hops: only the partial-sum accumulation uses the TSV/MIV
       pile: each of the R*C piles moves one word across each of its
       (l-1) interfaces per fold -> R*C*(l-1) word-hops over R*C*(l-1)
       vertical links => per-link activity 1/tau_fold. This is the
       asymmetry that makes the paper's dynamic power analysis matter.
+
+    WS and IS keep the same operand-delivery hop model (2 hops per
+    useful MAC) but have **zero** vertical activity: extended to 3D they
+    split their temporal dimension across tiers with no cross-tier
+    traffic (Sec. III-C), which is why the paper focuses on dOS.
     """
-    M, K, N, R, C, L = (int(x) for x in (M, K, N, R, C, tiers))
-    kl = -(-K // L)
-    folds = int(_ceil_div(M, R)) * int(_ceil_div(N, C))
-    tau_fold = 2 * R + C + kl + L - 3 if L > 1 else 2 * R + C + K - 2
-    cycles = float(tau_fold * folds)
+    M, K, N, R, C, L = np.broadcast_arrays(
+        *(np.asarray(x, dtype=np.int64) for x in (M, K, N, R, C, tiers))
+    )
+    if dataflow in ("os", "dos"):
+        kl = _ceil_div(K, L)
+        folds = _ceil_div(M, R) * _ceil_div(N, C)
+        tau_fold = 2 * R + C + kl + L - 3  # == 2R + C + K - 2 at l = 1
+        cycles = (tau_fold * folds).astype(np.float64)
+        v_hops = np.where(L > 1, R * C * (L - 1) * folds, 0).astype(np.float64)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            v_act = np.where(
+                L > 1, v_hops / (cycles * R * C * np.maximum(L - 1, 1)), 0.0
+            )
+    elif dataflow == "ws":
+        cycles = tau_ws(M, K, N, R, C, L).astype(np.float64)
+        v_hops = np.zeros_like(cycles)
+        v_act = np.zeros_like(cycles)
+    elif dataflow == "is":
+        cycles = tau_is(M, K, N, R, C, L).astype(np.float64)
+        v_hops = np.zeros_like(cycles)
+        v_act = np.zeros_like(cycles)
+    else:
+        raise ValueError(f"unknown dataflow {dataflow!r}")
 
     # Useful ops honour ragged edges (average active tile = M*N/folds).
-    mac_ops = float(M * N * K)  # total useful MACs across tiers
+    mac_ops = (M * N * K).astype(np.float64)  # total useful MACs across tiers
     mac_act = mac_ops / (cycles * R * C * L)
-
-    # Every useful MAC-op implies one A-hop and one B-hop arriving at
-    # that PE, so in-plane word-hops ~= 2 * mac_ops.
     h_hops = 2.0 * mac_ops
     n_hlinks = 2.0 * R * C * L
     h_act = h_hops / (cycles * n_hlinks)
-
-    if L > 1:
-        v_hops = float(R * C * (L - 1) * folds)
-        n_vlinks = float(R * C * (L - 1))
-        v_act = v_hops / (cycles * n_vlinks)
-    else:
-        v_hops, v_act = 0.0, 0.0
 
     return Activity(
         mac=mac_act,
@@ -126,3 +154,15 @@ def dos_activity(M, K, N, R, C, tiers) -> Activity:
         vlink_hops_total=v_hops,
         mac_ops_total=mac_ops,
     )
+
+
+def dos_activity(M, K, N, R, C, tiers) -> Activity:
+    """Scalar dOS activity factors (batch-of-one of ``activity_batched``).
+
+    For tiers == 1 this is plain OS on a 2D array.
+    """
+    a = activity_batched(
+        np.array([M]), np.array([K]), np.array([N]),
+        np.array([R]), np.array([C]), np.array([tiers]), "dos",
+    )
+    return Activity(*(float(np.asarray(f)[0]) for f in dataclasses.astuple(a)))

@@ -1,7 +1,12 @@
 """Design-space exploration sweeps (paper Figs. 5, 6, 7 and Sec. IV-A).
 
-These are the paper's workload/architecture studies, reproduced from the
-analytical model:
+These are the paper's workload/architecture studies. Each sweep is a
+thin wrapper over the batched evaluation engine (``core.engine``): it
+builds one ``DesignGrid`` spanning every (workload, MAC budget, tier)
+combination, makes a **single** ``evaluate()`` call, and reshapes the
+stacked result into the figure's layout — no per-point Python loops.
+Regression tests pin the outputs bit-for-bit to the original per-point
+loop implementations.
 
 - Fig. 5: 3D-vs-2D speedup over tier count, for several MAC budgets and
   several K (M = 64, N = 147 fixed — ResNet50's RN0 M/N).
@@ -18,7 +23,8 @@ import dataclasses
 
 import numpy as np
 
-from .analytical import mac_threshold, optimal_tiers, speedup_3d
+from .analytical import mac_threshold
+from .engine import DesignGrid, evaluate, optimal_tiers_batched
 
 __all__ = [
     "fig5_sweep",
@@ -48,13 +54,18 @@ def fig5_sweep(
     M=64,
     N=147,
     mode="opt",
+    backend="numpy",
 ):
     """Speedup vs tier count for each (MAC budget, K). Returns
-    {(n_macs, K): [speedup per tier count]}."""
+    {(n_macs, K): [speedup per tier count]} — one engine call."""
+    workloads = [(M, k, N) for k in ks]
+    grid = DesignGrid.product(workloads, mac_budgets, tiers, mode=mode)
+    res = evaluate(grid, backend=backend, metrics=("perf",))
+    s = res.speedup.reshape(len(ks), len(mac_budgets), len(tiers))
     out = {}
-    for n in mac_budgets:
-        for k in ks:
-            out[(n, k)] = [speedup_3d(M, k, N, n, l, mode) for l in tiers]
+    for bi, n in enumerate(mac_budgets):
+        for ki, k in enumerate(ks):
+            out[(n, k)] = [float(v) for v in s[ki, bi]]
     return tiers, out
 
 
@@ -65,15 +76,21 @@ def fig6_sweep(
     M=64,
     tiers=4,
     mode="opt",
+    backend="numpy",
 ):
     """Speedup vs MAC budget at fixed tier count. Returns
-    {(N, K): [speedup per budget]} plus the N_min threshold per N."""
+    {(N, K): [speedup per budget]} plus the N_min threshold per N —
+    one engine call."""
+    workloads = [(M, k, n_dim) for n_dim in ns for k in ks]
+    grid = DesignGrid.product(workloads, mac_budgets, [tiers], mode=mode)
+    res = evaluate(grid, backend=backend, metrics=("perf",))
+    s = res.speedup.reshape(len(ns), len(ks), len(mac_budgets))
     out = {}
     thresholds = {}
-    for n_dim in ns:
+    for ni, n_dim in enumerate(ns):
         thresholds[n_dim] = mac_threshold(M, n_dim)
-        for k in ks:
-            out[(n_dim, k)] = [speedup_3d(M, k, n_dim, b, tiers, mode) for b in mac_budgets]
+        for ki, k in enumerate(ks):
+            out[(n_dim, k)] = [float(v) for v in s[ni, ki]]
     return mac_budgets, out, thresholds
 
 
@@ -95,10 +112,25 @@ def random_workloads(n: int = 300, seed: int = 0):
     return np.stack([M, K, N], axis=1)
 
 
-def fig7_scatter(mac_budgets=(2**14, 2**16, 2**18), n_workloads=300, seed=0, max_tiers=16, mode="opt"):
+def fig7_scatter(
+    mac_budgets=(2**14, 2**16, 2**18),
+    n_workloads=300,
+    seed=0,
+    max_tiers=16,
+    mode="opt",
+    backend="numpy",
+):
+    """Optimal tier count per workload x budget — one engine call over
+    the full (workloads x budgets x tiers) grid."""
     wl = random_workloads(n_workloads, seed)
-    results = []
-    for b in mac_budgets:
-        opt = np.array([optimal_tiers(m, k, n, b, max_tiers, mode)[0] for m, k, n in wl])
-        results.append(Fig7Result(mac_budget=b, optimal_tiers=opt, median=float(np.median(opt))))
-    return results
+    best, _ = optimal_tiers_batched(
+        wl, mac_budgets, max_tiers=max_tiers, mode=mode, backend=backend
+    )
+    return [
+        Fig7Result(
+            mac_budget=b,
+            optimal_tiers=best[:, bi].astype(np.int64),
+            median=float(np.median(best[:, bi])),
+        )
+        for bi, b in enumerate(mac_budgets)
+    ]

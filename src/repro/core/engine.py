@@ -1,0 +1,709 @@
+"""Unified batched design-space evaluation engine (perf + PPA sweeps).
+
+The paper's headline results (Figs. 5-7, 9; up to 9.14x 3D-vs-2D
+speedup) come from sweeping thousands of (workload x array x tier)
+design points through the runtime, power and thermal models. This
+module evaluates such sweeps in **one vectorized pass**:
+
+    grid = DesignGrid.product(
+        workloads=[(64, 12100, 147)],          # (M, K, N) rows
+        mac_budgets=[2**14, 2**16, 2**18],
+        tiers=range(1, 17),
+    )
+    res = evaluate(grid)                       # every metric, (W, P) arrays
+    res.speedup, res.power_w, res.t_max_c, ...
+
+For every (workload, design point) pair the engine finds the optimal
+per-tier (R, C) under the MAC budget (or takes explicit rows/cols),
+then derives in one shot: cycles (Eq. 1/2 and the WS/IS analogues),
+switching activities, silicon area, dynamic+static power, energy,
+steady-state tier temperatures (lumped model), utilization, and the
+3D-vs-2D speedup against the budget-matched optimized 2D baseline.
+
+Backends: ``backend='numpy'`` (default) runs the batched search with
+numpy; ``backend='jax'`` jit-compiles the same search kernel
+(``analytical._search_rc``) with ``jax.numpy`` under a scoped x64
+context (cycle counts overflow int32). Both return identical integers;
+derived metrics are always finished in numpy so the two backends share
+every formula downstream of the search.
+
+The scalar optimizers in ``core.analytical`` are batch-of-one wrappers
+over the same kernel, so per-point and grid results can never drift —
+the regression tests pin ``fig5_sweep``/``fig6_sweep``/``fig7_scatter``
+to the legacy loop implementations bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import numpy as np
+
+from .analytical import (
+    INVALID_CYCLES,
+    _search_rc,
+    _square_rc,
+    dataflow_dims,
+)
+from .dataflow import activity_batched
+from .ppa import constants as C
+from .ppa.area import array_area_um2_batched
+from .ppa.power import array_power_batched
+from .ppa.thermal import lumped_tier_temps
+
+__all__ = [
+    "DesignGrid",
+    "EvalResult",
+    "evaluate",
+    "optimal_tiers_batched",
+    "pareto_frontier",
+    "score_mesh_strategies",
+    "MESH_STRATEGIES",
+    "ICI_HOP_LATENCY_S",
+]
+
+_DEFAULT_CHUNK = 2048
+_ALL_METRICS = ("perf", "area", "power", "thermal")
+
+
+def _as_1d_int(x) -> np.ndarray:
+    return np.atleast_1d(np.asarray(x, dtype=np.int64))
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignGrid:
+    """A batch of GEMM workloads crossed with a batch of design points.
+
+    ``workloads`` is (W, 3) int64 — rows of (M, K, N). Design points are
+    parallel (P,) arrays: either ``mac_budgets`` (the engine optimizes
+    the per-tier (R, C) shape under ``mac_budgets // tiers``, the
+    paper's Sec. IV-A rounding) or explicit ``rows``/``cols``.
+    ``dataflow`` is 'os' | 'ws' | 'is' | 'dos' — one string for the
+    whole grid or a (P,) array ('os' is dOS at any tier count's l=1
+    formulaic limit; at tiers > 1 'os' is treated as dOS). ``tech`` is
+    '2d' | 'tsv' | 'miv', scalar or (P,).
+    """
+
+    workloads: np.ndarray
+    tiers: np.ndarray
+    mac_budgets: np.ndarray | None = None
+    rows: np.ndarray | None = None
+    cols: np.ndarray | None = None
+    dataflow: str | np.ndarray = "dos"
+    tech: str | np.ndarray = "tsv"
+    mode: str = "opt"
+
+    def __post_init__(self):
+        wl = np.atleast_2d(np.asarray(self.workloads, dtype=np.int64))
+        if wl.ndim != 2 or wl.shape[1] != 3:
+            raise ValueError(f"workloads must be (W, 3) of (M, K, N), got {wl.shape}")
+        object.__setattr__(self, "workloads", wl)
+        if self.mac_budgets is None and (self.rows is None or self.cols is None):
+            raise ValueError("need either mac_budgets or explicit rows+cols")
+        # The point count P is the common broadcast length of every
+        # per-point field, so e.g. scalar tiers + vector budgets works.
+        per_point = {"tiers": _as_1d_int(self.tiers)}
+        for name in ("mac_budgets", "rows", "cols"):
+            v = getattr(self, name)
+            if v is not None:
+                per_point[name] = _as_1d_int(v)
+        for name in ("dataflow", "tech"):
+            v = getattr(self, name)
+            if not isinstance(v, str):
+                per_point[name] = np.atleast_1d(np.asarray(v))
+        try:
+            P = np.broadcast_shapes(*(a.shape for a in per_point.values()))[0]
+        except ValueError:
+            lens = {k: a.shape[0] for k, a in per_point.items()}
+            raise ValueError(
+                f"design-point arrays have incompatible lengths: {lens}"
+            ) from None
+        for name, v in per_point.items():
+            object.__setattr__(self, name, np.broadcast_to(v, (P,)))
+
+    @property
+    def n_workloads(self) -> int:
+        return self.workloads.shape[0]
+
+    @property
+    def n_points(self) -> int:
+        return self.tiers.shape[0]
+
+    @classmethod
+    def product(
+        cls,
+        workloads,
+        mac_budgets: Sequence[int],
+        tiers: Sequence[int],
+        **kw,
+    ) -> "DesignGrid":
+        """Cartesian product of budgets x tiers (budget-major ordering:
+        point index p = i_budget * len(tiers) + i_tier)."""
+        b = _as_1d_int(mac_budgets)
+        t = _as_1d_int(tiers)
+        bb = np.repeat(b, t.shape[0])
+        tt = np.tile(t, b.shape[0])
+        return cls(workloads=workloads, tiers=tt, mac_budgets=bb, **kw)
+
+    @classmethod
+    def explicit(cls, workloads, rows, cols, tiers, **kw) -> "DesignGrid":
+        """Design points with fixed per-tier (rows, cols) — no search."""
+        return cls(workloads=workloads, tiers=tiers, rows=rows, cols=cols, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalResult:
+    """Stacked evaluation results; every array is (W, P) float64/int64.
+
+    ``cycles`` / ``cycles_2d`` are float64 (np.inf marks invalid design
+    points, e.g. per-tier budget < 1); ``speedup = cycles_2d / cycles``
+    against the budget-matched optimized 2D baseline of the same
+    dataflow family. Metric groups not requested from ``evaluate()``
+    are None.
+    """
+
+    grid: DesignGrid
+    rows: np.ndarray
+    cols: np.ndarray
+    cycles: np.ndarray
+    cycles_2d: np.ndarray
+    speedup: np.ndarray
+    utilization: np.ndarray
+    valid: np.ndarray
+    mac_act: np.ndarray | None = None
+    hlink_act: np.ndarray | None = None
+    vlink_act: np.ndarray | None = None
+    area_um2: np.ndarray | None = None
+    footprint_um2: np.ndarray | None = None
+    area_norm_speedup: np.ndarray | None = None
+    power_w: np.ndarray | None = None
+    peak_power_w: np.ndarray | None = None
+    static_power_w: np.ndarray | None = None
+    dynamic_power_w: np.ndarray | None = None
+    energy_j: np.ndarray | None = None
+    edp_js: np.ndarray | None = None
+    t_max_c: np.ndarray | None = None
+    within_thermal_budget: np.ndarray | None = None
+
+    def to_dict(self) -> dict:
+        """Array fields as a plain dict (None entries dropped)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name == "grid":
+                continue
+            v = getattr(self, f.name)
+            if v is not None:
+                out[f.name] = v
+        return out
+
+    def pareto_mask(
+        self, objectives: Sequence[str] = ("cycles", "area_um2", "power_w")
+    ) -> np.ndarray:
+        """(W, P) bool — per-workload Pareto frontier over the named
+        (minimized) metric columns (paper Sec. IV-C/D trade-offs)."""
+        cols = []
+        for name in objectives:
+            v = getattr(self, name)
+            if v is None:
+                raise ValueError(f"metric {name!r} was not evaluated")
+            cols.append(np.asarray(v, dtype=np.float64))
+        stacked = np.stack(cols, axis=-1)  # (W, P, n_obj)
+        return np.stack([pareto_frontier(row) for row in stacked])
+
+
+# ---------------------------------------------------------------------------
+# Search backends
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _jax_search_fn(r_max_total: int):
+    import jax
+    import jax.numpy as jnp
+
+    def run(D1, D2, Tser, budget):
+        return _search_rc(jnp, D1, D2, Tser, budget, r_max_total)
+
+    return jax.jit(run)
+
+
+def _search_batch(D1, D2, Tser, budget, backend: str, chunk: int):
+    """Chunked dispatch of the (R, C) search. Returns (r, c, tau) int64."""
+    B = D1.shape[0]
+    r_out = np.empty(B, dtype=np.int64)
+    c_out = np.empty(B, dtype=np.int64)
+    t_out = np.empty(B, dtype=np.int64)
+    if B == 0:
+        return r_out, c_out, t_out
+    if backend == "jax":
+        from jax.experimental import enable_x64
+
+        # One static r_max (rounded up to a power of two to bound
+        # recompiles) for the whole batch keeps a single jit cache entry.
+        r_max = int(np.max(np.minimum(D1, budget)))
+        r_max = 1 << max(int(np.ceil(np.log2(max(r_max, 1)))), 0)
+        with enable_x64():
+            fn = _jax_search_fn(r_max)
+            for lo in range(0, B, chunk):
+                hi = min(lo + chunk, B)
+                r, c, t = fn(D1[lo:hi], D2[lo:hi], Tser[lo:hi], budget[lo:hi])
+                r_out[lo:hi], c_out[lo:hi], t_out[lo:hi] = (
+                    np.asarray(r), np.asarray(c), np.asarray(t),
+                )
+        return r_out, c_out, t_out
+    if backend != "numpy":
+        raise ValueError(f"unknown backend {backend!r}")
+    # Sort by each point's own search width so every chunk gets a tight
+    # r_max — mixing one wide point into a chunk would otherwise charge
+    # the whole chunk its width. Pure reordering; results are scattered
+    # back, so the output is unchanged.
+    widths = np.minimum(D1, budget)
+    order = np.argsort(widths, kind="stable")
+    tables = _factored_tables(D1, D2, budget, int(widths[order[-1]]))
+    for lo in range(0, B, chunk):
+        sel = order[lo : lo + chunk]
+        r_max = int(widths[sel[-1]])
+        r = c = t = None
+        if tables is not None:
+            out = _search_from_tables(tables, sel, Tser, r_max)
+            if out is not None:
+                r, c, t = out
+        if r is None:
+            r, c, t = _search_rc(
+                np, D1[sel], D2[sel], Tser[sel], budget[sel], r_max
+            )
+        r_out[sel], c_out[sel], t_out[sel] = r, c, t
+    return r_out, c_out, t_out
+
+
+def _factored_tables(D1, D2, budget, r_max_total: int):
+    """Precompute the Tser-independent parts of the (R, C) search.
+
+    Per candidate R the tightened pair only depends on D1 (row folds)
+    and on (D2, budget) (column folds): tau = (2*R2 + C2 + Tser - 2) *
+    foldM * f. Design grids repeat the same workloads across many tier
+    counts/budgets, so computing those chains once per *unique* D1 and
+    per unique (D2, budget) pair and gathering rows afterwards removes
+    nearly all of the division work. The search-space bound R <=
+    min(D1, budget) is baked into the tables as inf entries, so invalid
+    candidates cost nothing per chunk. Returns None when the grid has
+    too little repetition (or is too wide for exact float64) to pay
+    off.
+    """
+    if r_max_total < 1 or max(
+        int(D1.max(initial=0)), int(D2.max(initial=0)), int(budget.max(initial=0))
+    ) >= 2**52:
+        return None
+    uD1, invD1 = np.unique(D1, return_inverse=True)
+    pair = np.stack([D2, budget], axis=1)
+    upair, invP = np.unique(pair, axis=0, return_inverse=True)
+    if (uD1.shape[0] + upair.shape[0]) * 2 > D1.shape[0]:
+        return None  # not enough repetition to amortize the tables
+    Rf = np.arange(1.0, r_max_total + 1.0)[None, :]
+    D1f = uD1.astype(np.float64)[:, None]
+    foldM = np.floor((D1f + Rf - 1.0) / Rf)
+    R2 = np.floor((D1f + foldM - 1.0) / foldM)  # tightened, same folds
+    D2f = upair[:, 0].astype(np.float64)[:, None]
+    bf = upair[:, 1].astype(np.float64)[:, None]
+    C1 = np.minimum(np.maximum(np.floor(bf / Rf), 1.0), D2f)
+    f = np.floor((D2f + C1 - 1.0) / C1)
+    C2 = np.floor((D2f + f - 1.0) / f)  # tightened: same folds, smaller C
+    # Exact-arithmetic bound pieces: tau <= (fill_base + Tser - 2) *
+    # prod_max. Chunks whose bound stays under 2^53 skip any overflow
+    # guard (the common case).
+    fill_base = 2.0 * R2.max() + C2.max()
+    prod_max = foldM.max() * f.max()
+    # Bake the R <= D1 / R <= budget pruning in as inf (fill > 0, so
+    # inf propagates through tau and argmin never picks these).
+    foldM[Rf > D1f] = np.inf
+    f[Rf > bf] = np.inf
+    # Table entries < 2^23 are exact in float32 — halves the gather
+    # bandwidth of the chunk stage; tau itself is still formed in f64.
+    dt = (
+        np.float32
+        if int(uD1.max(initial=0)) < 2**22 and int(upair[:, 0].max(initial=0)) < 2**23
+        else np.float64
+    )
+    return (
+        invD1,
+        invP,
+        foldM.astype(dt),
+        (2.0 * R2).astype(dt),
+        f.astype(dt),
+        C2.astype(dt),
+        (fill_base, prod_max),
+    )
+
+
+def _search_from_tables(tables, sel, Tser, r_max: int):
+    """Finish the search for one chunk from the factored f64 tables.
+
+    Returns None on (rare) potential tau overflow past 2^53; the caller
+    reruns the chunk through the exact int64 kernel.
+    """
+    invD1, invP, foldM_u, twoR2_u, f_u, C2_u, (fill_base, prod_max) = tables
+    Tsf = Tser[sel].astype(np.float64)
+    if (fill_base + float(Tsf.max(initial=0.0)) - 2.0) * prod_max >= 2.0**53:
+        return None
+    g1 = invD1[sel]
+    g2 = invP[sel]
+    C2 = C2_u[:, :r_max][g2]
+    folds = np.multiply(
+        foldM_u[:, :r_max][g1], f_u[:, :r_max][g2], dtype=np.float64
+    )
+    taus = np.add(twoR2_u[:, :r_max][g1], C2, dtype=np.float64)
+    taus += (Tsf - 2.0)[:, None]
+    np.multiply(taus, folds, out=taus)
+    i = np.argmin(taus, axis=1)
+    rows = np.arange(sel.shape[0])
+    t = taus[rows, i]
+    r = (twoR2_u[g1, i] * 0.5).astype(np.int64)
+    c = C2[rows, i].astype(np.int64)
+    return r, c, np.where(np.isfinite(t), t, INVALID_CYCLES).astype(np.int64)
+
+
+def _optimize_flat(M, K, N, n_macs, tiers, dataflow, mode, backend, chunk):
+    """Batched shape optimization (flat arrays) honoring invalid budgets."""
+    budget = n_macs // tiers
+    ok = budget >= 1
+    bsafe = np.maximum(budget, 1)
+    D1, D2, Tser = dataflow_dims(dataflow, M, K, N, tiers)
+    if mode == "square":
+        r, c, t = _square_rc(np, D1, D2, Tser, bsafe)
+    else:
+        r, c, t = _search_batch(D1, D2, Tser, bsafe, backend, chunk)
+    t = np.where(ok, t, INVALID_CYCLES)
+    return r, c, t
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+def evaluate(
+    grid: DesignGrid,
+    backend: str = "numpy",
+    metrics: Sequence[str] = _ALL_METRICS,
+    chunk: int = _DEFAULT_CHUNK,
+) -> EvalResult:
+    """Evaluate every (workload, design point) pair of the grid at once.
+
+    ``metrics`` selects result groups: 'perf' (always computed),
+    'area', 'power', 'thermal' (thermal implies power implies area).
+    ``chunk`` bounds the working-set of the (B, R_max) search
+    intermediates; results are independent of it.
+    """
+    metrics = set(metrics)
+    unknown = metrics - set(_ALL_METRICS)
+    if unknown:
+        raise ValueError(f"unknown metrics {sorted(unknown)}")
+    if "thermal" in metrics:
+        metrics.add("power")
+    if "power" in metrics:
+        metrics.add("area")
+
+    W, P = grid.n_workloads, grid.n_points
+    # Flatten workload-major: flat index = w * P + p  -> reshape to (W, P).
+    Mf = np.repeat(grid.workloads[:, 0], P)
+    Kf = np.repeat(grid.workloads[:, 1], P)
+    Nf = np.repeat(grid.workloads[:, 2], P)
+    Lf = np.tile(grid.tiers, W)
+    tech_p = (
+        np.full(P, grid.tech) if isinstance(grid.tech, str) else grid.tech
+    )
+    techf = np.tile(tech_p, W)
+    if grid.mac_budgets is not None:
+        budgetf = np.tile(grid.mac_budgets, W)
+    else:
+        budgetf = np.tile(grid.rows * grid.cols * grid.tiers, W)
+
+    df_p = (
+        np.full(P, grid.dataflow)
+        if isinstance(grid.dataflow, str)
+        else np.asarray(grid.dataflow)
+    )
+    dff = np.tile(df_p, W)
+
+    rows = np.empty(W * P, dtype=np.int64)
+    cols = np.empty(W * P, dtype=np.int64)
+    cyc = np.full(W * P, INVALID_CYCLES, dtype=np.int64)
+    cyc2d = np.full(W * P, INVALID_CYCLES, dtype=np.int64)
+
+    for df in np.unique(dff):
+        sel = np.nonzero(dff == df)[0]
+        M_, K_, N_, L_, b_ = Mf[sel], Kf[sel], Nf[sel], Lf[sel], budgetf[sel]
+        if grid.rows is not None:
+            rows[sel] = np.tile(grid.rows, W)[sel]
+            cols[sel] = np.tile(grid.cols, W)[sel]
+            D1, D2, Tser = dataflow_dims(str(df), M_, K_, N_, L_)
+            r_, c_ = rows[sel], cols[sel]
+            cyc[sel] = (2 * r_ + c_ + Tser - 2) * (-(-D1 // r_)) * (-(-D2 // c_))
+        else:
+            r_, c_, t_ = _optimize_flat(
+                M_, K_, N_, b_, L_, str(df), grid.mode, backend, chunk
+            )
+            rows[sel], cols[sel], cyc[sel] = r_, c_, t_
+        # Budget-matched optimized 2D baseline of the same dataflow
+        # family. Dedupe (workload, budget): within `sel` the baseline
+        # is constant across tier counts.
+        key = np.stack([M_, K_, N_, b_], axis=1)
+        uniq, inv = np.unique(key, axis=0, return_inverse=True)
+        _, _, t2 = _optimize_flat(
+            uniq[:, 0], uniq[:, 1], uniq[:, 2], uniq[:, 3],
+            np.ones(len(uniq), dtype=np.int64), str(df), grid.mode,
+            backend, chunk,
+        )
+        cyc2d[sel] = t2[inv]
+
+    valid = cyc != INVALID_CYCLES
+    cycles = np.where(valid, cyc, 0).astype(np.float64)
+    cycles[~valid] = np.inf
+    cycles_2d = np.where(cyc2d != INVALID_CYCLES, cyc2d, 0).astype(np.float64)
+    cycles_2d[cyc2d == INVALID_CYCLES] = np.inf
+    with np.errstate(invalid="ignore", divide="ignore"):
+        speedup = np.where(valid, cycles_2d / cycles, np.nan)
+        n_used = rows * cols * Lf
+        utilization = np.where(
+            valid, (Mf * Kf * Nf).astype(np.float64) / (n_used * cycles), np.nan
+        )
+
+    res = dict(
+        rows=rows.reshape(W, P),
+        cols=cols.reshape(W, P),
+        cycles=cycles.reshape(W, P),
+        cycles_2d=cycles_2d.reshape(W, P),
+        speedup=speedup.reshape(W, P),
+        utilization=utilization.reshape(W, P),
+        valid=valid.reshape(W, P),
+    )
+
+    act = None
+    if "power" in metrics or "area" in metrics:
+        # Activities are cheap; compute per dataflow group.
+        mac_a = np.zeros(W * P)
+        hl_a = np.zeros(W * P)
+        vl_a = np.zeros(W * P)
+        for df in np.unique(dff):
+            sel = np.nonzero(dff == df)[0]
+            a = activity_batched(
+                Mf[sel], Kf[sel], Nf[sel], rows[sel], cols[sel], Lf[sel], str(df)
+            )
+            mac_a[sel], hl_a[sel], vl_a[sel] = a.mac, a.hlink, a.vlink
+        res.update(
+            mac_act=mac_a.reshape(W, P),
+            hlink_act=hl_a.reshape(W, P),
+            vlink_act=vl_a.reshape(W, P),
+        )
+
+    if "area" in metrics:
+        # The paper's fixed-budget comparison charges the provisioned
+        # array ((budget // l) * l MACs), not just the mapped sub-array.
+        prov = (budgetf // Lf) * Lf
+        a3, fp3, _ = array_area_um2_batched(prov, Lf, techf)
+        a2, _, _ = array_area_um2_batched(budgetf, np.ones_like(Lf), "2d")
+        with np.errstate(invalid="ignore", divide="ignore"):
+            ans = speedup * (a2 / a3)
+        res.update(
+            area_um2=a3.reshape(W, P),
+            footprint_um2=fp3.reshape(W, P),
+            area_norm_speedup=ans.reshape(W, P),
+        )
+
+    if "power" in metrics:
+        pw = {}
+        for df in np.unique(dff):
+            sel = np.nonzero(dff == df)[0]
+            p = array_power_batched(
+                Mf[sel], Kf[sel], Nf[sel], rows[sel], cols[sel], Lf[sel],
+                techf[sel], str(df),
+            )
+            for k, v in p.items():
+                pw.setdefault(k, np.zeros(W * P))[sel] = v
+        t_s = np.where(valid, pw["cycles"] / C.FREQ_HZ, np.nan)
+        energy = pw["total_w"] * t_s
+        res.update(
+            power_w=np.where(valid, pw["total_w"], np.nan).reshape(W, P),
+            peak_power_w=np.where(valid, pw["peak_w"], np.nan).reshape(W, P),
+            static_power_w=np.where(valid, pw["static_w"], np.nan).reshape(W, P),
+            dynamic_power_w=np.where(valid, pw["dynamic_w"], np.nan).reshape(W, P),
+            energy_j=energy.reshape(W, P),
+            edp_js=(energy * t_s).reshape(W, P),
+        )
+
+    if "thermal" in metrics:
+        lmax = int(np.max(Lf))
+        idx = np.arange(lmax)[None, :]
+        alive = idx < Lf[:, None]
+        with np.errstate(invalid="ignore"):
+            q = np.where(
+                alive, (np.where(valid, pw["total_w"], 0.0) / Lf)[:, None], 0.0
+            )
+        fp_mm2 = res["footprint_um2"].reshape(-1) * 1e-6
+        T = lumped_tier_temps(q, fp_mm2, Lf, techf, rows * cols)
+        t_max = np.where(valid, np.max(np.where(alive, T, -np.inf), axis=1), np.nan)
+        res.update(
+            t_max_c=t_max.reshape(W, P),
+            within_thermal_budget=(t_max < C.THERMAL_BUDGET_C).reshape(W, P),
+        )
+
+    return EvalResult(grid=grid, **res)
+
+
+def optimal_tiers_batched(
+    workloads,
+    mac_budgets,
+    max_tiers: int = 16,
+    mode: str = "opt",
+    backend: str = "numpy",
+    chunk: int = _DEFAULT_CHUNK,
+):
+    """Batched Fig.-7 argmin over tier count for every (workload, budget).
+
+    Returns ``(best_tiers, best_cycles)`` int64/float64 arrays of shape
+    (W, B). Ties break toward fewer tiers, matching the scalar
+    ``analytical.optimal_tiers`` loop exactly.
+    """
+    wl = np.atleast_2d(np.asarray(workloads, dtype=np.int64))
+    budgets = _as_1d_int(mac_budgets)
+    W, B, T = wl.shape[0], budgets.shape[0], int(max_tiers)
+    # Direct search over the flattened (W x B x T) grid: unlike a full
+    # evaluate() this skips the 2D-baseline pass Fig. 7 never uses.
+    Mf = np.repeat(wl[:, 0], B * T)
+    Kf = np.repeat(wl[:, 1], B * T)
+    Nf = np.repeat(wl[:, 2], B * T)
+    Lf = np.tile(np.arange(1, T + 1, dtype=np.int64), W * B)
+    nm = np.tile(np.repeat(budgets, T), W)
+    _, _, t = _optimize_flat(Mf, Kf, Nf, nm, Lf, "dos", mode, backend, chunk)
+    cyc = np.where(t != INVALID_CYCLES, t, 0).astype(np.float64)
+    cyc[t == INVALID_CYCLES] = np.inf
+    cyc = cyc.reshape(W, B, T)
+    best = np.argmin(cyc, axis=2)
+    best_cycles = np.take_along_axis(cyc, best[:, :, None], axis=2)[:, :, 0]
+    return best + 1, best_cycles
+
+
+# ---------------------------------------------------------------------------
+# Pareto utility (paper Sec. IV-C/D: latency-area-power trade-offs)
+# ---------------------------------------------------------------------------
+
+def pareto_frontier(points, chunk: int = 2048) -> np.ndarray:
+    """Boolean mask of Pareto-optimal rows (all objectives minimized).
+
+    ``points`` is (n, d); a row is on the frontier iff no other row is
+    <= in every objective and < in at least one. Rows with non-finite
+    entries are never on the frontier. O(n^2) in ``chunk``-sized blocks.
+    """
+    pts = np.atleast_2d(np.asarray(points, dtype=np.float64))
+    n = pts.shape[0]
+    finite = np.isfinite(pts).all(axis=1)
+    mask = np.zeros(n, dtype=bool)
+    cand = np.nonzero(finite)[0]
+    if cand.size == 0:
+        return mask
+    P = pts[cand]
+    dominated = np.zeros(cand.size, dtype=bool)
+    for lo in range(0, cand.size, chunk):
+        hi = min(lo + chunk, cand.size)
+        blk = P[lo:hi]  # (b, d)
+        dom = (P[None, :, :] <= blk[:, None, :]).all(-1) & (
+            P[None, :, :] < blk[:, None, :]
+        ).any(-1)
+        dominated[lo:hi] = dom.any(axis=1)
+    mask[cand[~dominated]] = True
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Batched TPU-mesh strategy scoring (what core.advisor ranks with)
+# ---------------------------------------------------------------------------
+
+_BF16 = 2  # bytes
+#: per-hop ICI latency. This is where the paper's (l-1) *serial* adder
+#: term survives on a mesh: a ring collective over an axis of size l
+#: costs ~2(l-1) latency hops regardless of payload, so the dOS total is
+#: convex in l exactly like Eq. 2.
+ICI_HOP_LATENCY_S = 1e-6
+
+MESH_STRATEGIES = ("replicate", "shard_M", "shard_N", "shard_K")
+
+
+def score_mesh_strategies(
+    M,
+    K,
+    N,
+    axis,
+    bytes_per_el: int = _BF16,
+    flops_per_s: float = C.TPU_PEAK_FLOPS_BF16,
+    hbm_bw: float = C.TPU_HBM_BW,
+    ici_bw: float = C.TPU_ICI_BW_PER_LINK,
+    mxu_tile: int = 128,
+):
+    """Batched advisor scoring: cost every GEMM x every mesh strategy.
+
+    Vectorized over broadcastable ``M, K, N, axis``. Returns a dict
+    ``{strategy: {'compute_s', 'memory_s', 'collective_s', 'total_s'}}``
+    of float64 arrays. The compute term includes the paper's
+    fill/quantization effect: a per-device output tile smaller than the
+    MXU tile wastes the systolic array exactly like the paper's
+    ceil(M/R)ceil(N/C) rounding — this is how N_macs > M*N re-emerges
+    at chip level. ``core.advisor.score_strategies`` is the
+    batch-of-one wrapper.
+    """
+    Mi, Ki, Ni, L = np.broadcast_arrays(
+        *(np.asarray(x, dtype=np.int64) for x in (M, K, N, axis))
+    )
+    # Dimension products (M*N*K and friends) overflow int64 for very
+    # large GEMMs; float64 keeps them finite like the old Python-int
+    # scalar scoring did, and is exact below 2^53.
+    M, K, N = (a.astype(np.float64) for a in (Mi, Ki, Ni))
+    b = bytes_per_el
+
+    def eff(m, n, k):
+        um = -(-m // mxu_tile) * mxu_tile
+        un = -(-n // mxu_tile) * mxu_tile
+        uk = -(-k // 8) * 8
+        return (m * n * k) / (um * un * uk)
+
+    def compute_t(m, n, k):
+        e = np.maximum(eff(m, n, k), 1e-6)
+        return 2.0 * m * n * k / (flops_per_s * e) / 1.0
+
+    def memory_t(m, n, k):
+        return b * (m * k + k * n + m * n) / hbm_bw
+
+    def ring_allreduce(nbytes):
+        return 2.0 * (L - 1) / L * nbytes / ici_bw + 2 * (L - 1) * ICI_HOP_LATENCY_S
+
+    def ring_allgather(nbytes_shard):
+        return (L - 1) * nbytes_shard / ici_bw + (L - 1) * ICI_HOP_LATENCY_S
+
+    zeros = np.zeros(np.broadcast_shapes(M.shape), dtype=np.float64)
+    mL = (-(-Mi // L)).astype(np.float64)
+    nL = (-(-Ni // L)).astype(np.float64)
+    kL = (-(-Ki // L)).astype(np.float64)
+    out = {
+        "replicate": (compute_t(M, N, K), memory_t(M, N, K), zeros),
+        "shard_M": (compute_t(mL, N, K), memory_t(mL, N, K), zeros),
+        "shard_N": (
+            compute_t(M, nL, K),
+            memory_t(M, nL, K),
+            ring_allgather(b * M * nL),
+        ),
+        "shard_K": (
+            compute_t(M, N, kL),
+            memory_t(M, N, kL),
+            ring_allreduce(b * M * N),
+        ),
+    }
+    return {
+        name: {
+            "compute_s": comp,
+            "memory_s": mem,
+            "collective_s": coll,
+            # Compute and memory overlap on TPU; the collective is
+            # serialized (paper-faithful: sequential adder pile).
+            "total_s": np.maximum(comp, mem) + coll,
+        }
+        for name, (comp, mem, coll) in out.items()
+    }

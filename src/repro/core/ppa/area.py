@@ -10,16 +10,27 @@ Fig. 9 plots runtime-per-total-silicon-area of the 3D array normalized
 to the 2D array: ratio = speedup(l) / (1 + vlink_overhead(l)), where
 the overhead scales with (l-1)/l (the bottom tier has no downward
 links).
+
+All entry points are batched (arrays broadcast); the scalar
+``array_area_um2`` / ``area_normalized_speedup`` wrappers are the
+batch-of-one special cases kept for interactive use.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from ..analytical import optimize_array_2d, optimize_array_3d
 from . import constants as C
 
-__all__ = ["AreaReport", "array_area_um2", "area_normalized_speedup"]
+__all__ = [
+    "AreaReport",
+    "array_area_um2",
+    "array_area_um2_batched",
+    "area_normalized_speedup",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,16 +41,36 @@ class AreaReport:
     vlink_overhead: float  # vertical-link area / MAC area (per affected MAC)
 
 
+def array_area_um2_batched(n_macs_total, tiers, tech):
+    """Batched area model. ``tech`` is a str or array of '2d'|'tsv'|'miv'.
+
+    Returns ``(total_um2, footprint_um2, vlink_overhead)`` float64
+    arrays of the broadcast shape. Matches the scalar model exactly:
+    the bottom tier carries no downward vias, so the per-MAC vertical
+    overhead scales with (tiers-1)/tiers. '2d' entries add no via area
+    but still split ``n_macs_total`` per tier when ``tiers`` > 1 (like
+    the scalar model; query 2D dies with ``tiers == 1``).
+    """
+    n_macs_total, tiers = np.broadcast_arrays(
+        *(np.asarray(x, dtype=np.int64) for x in (n_macs_total, tiers))
+    )
+    tech = np.broadcast_to(np.asarray(tech), n_macs_total.shape)
+    per_tier = np.where(tiers > 1, n_macs_total // np.maximum(tiers, 1), n_macs_total)
+    a_per_via = np.where(tech == "tsv", C.A_TSV_UM2, C.A_MIV_UM2)
+    a_v = np.where(tech == "2d", 0.0, C.VLINK_BITS * a_per_via)
+    frac = (tiers - 1) / np.maximum(tiers, 1)
+    overhead = a_v * frac / C.A_MAC_UM2
+    footprint = per_tier * (C.A_MAC_UM2 + a_v * frac)
+    total = np.where(tech == "2d", footprint, footprint * tiers)
+    return total, footprint, overhead
+
+
 def array_area_um2(n_macs_total: int, tiers: int, tech: str) -> AreaReport:
-    per_tier = n_macs_total // tiers if tiers > 1 else n_macs_total
-    if tech == "2d":
-        a = per_tier * C.A_MAC_UM2
-        return AreaReport("2d", a, a, 0.0)
-    a_v = C.VLINK_BITS * (C.A_TSV_UM2 if tech == "tsv" else C.A_MIV_UM2)
-    frac = (tiers - 1) / tiers  # bottom tier carries no downward vias
-    per_mac = C.A_MAC_UM2 + a_v * frac
-    footprint = per_tier * per_mac
-    return AreaReport(tech, footprint * tiers, footprint, a_v * frac / C.A_MAC_UM2)
+    """Scalar wrapper over ``array_area_um2_batched`` (batch of one)."""
+    total, footprint, overhead = array_area_um2_batched(
+        np.array([n_macs_total]), np.array([tiers]), np.array([tech])
+    )
+    return AreaReport(tech, float(total[0]), float(footprint[0]), float(overhead[0]))
 
 
 def area_normalized_speedup(M, K, N, n_macs, tiers, tech, mode="opt") -> float:

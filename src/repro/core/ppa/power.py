@@ -6,7 +6,7 @@ dataflow drives horizontal links hard while vertical (TSV/MIV) links
 only carry partial-sum accumulation, so the two link classes have very
 different switching activities. This model therefore builds power from
 per-component switched energies x activity rates derived from the
-dataflow (``core.dataflow.dos_activity``):
+dataflow (``core.dataflow.activity_batched``):
 
     P = P_clk+leak(n_macs)                 (clocked every cycle)
       + P_wire(n_macs, die_side)           (die-size-dependent overhead)
@@ -16,17 +16,23 @@ dataflow (``core.dataflow.dos_activity``):
 
 Peak power adds the fully-active streaming path on top of the idle
 baseline (paper reports PrimeTime peak).
+
+``array_power_batched`` evaluates whole design grids at once (what the
+engine calls); the scalar ``array_power`` wrapper is the batch-of-one
+special case kept for interactive use and Table II.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
 
-from ..dataflow import dos_activity
+import numpy as np
+
+from ..analytical import _ceil_div
+from ..dataflow import activity_batched
 from . import constants as C
 
-__all__ = ["PowerReport", "array_power", "table2_setup"]
+__all__ = ["PowerReport", "array_power", "array_power_batched", "table2_setup"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,11 +44,72 @@ class PowerReport:
     runtime_cycles: float
 
 
-def _die_side_um(n_macs_per_tier: int, tech: str) -> float:
+def array_power_batched(M, K, N, rows, cols, tiers, tech, dataflow: str = "dos"):
+    """Batched power model: all arguments broadcast; ``tech`` is a str or
+    array of '2d'|'tsv'|'miv'. Returns a dict of float64 arrays:
+
+    ``total_w, peak_w, static_w, dynamic_w, clk_leak_w, die_wire_w,
+    mac_dyn_w, hlink_w, vlink_w, cycles``.
+
+    The in-plane hop count for OS/dOS charges the *full* array
+    width/height (systolic shifting does not stop at the useful region)
+    — the 2D array's hidden cost when R, C exceed the active M, N tile.
+    WS/IS (no cross-tier traffic) are charged the operand-delivery hops
+    from their activity model instead.
+    """
+    M, K, N, R, Cc, L = np.broadcast_arrays(
+        *(np.asarray(x, dtype=np.int64) for x in (M, K, N, rows, cols, tiers))
+    )
+    tech = np.broadcast_to(np.asarray(tech), M.shape)
+    act = activity_batched(M, K, N, R, Cc, L, dataflow)
+    n_per_tier = R * Cc
+    n_total = n_per_tier * L
+    t_s = act.cycles / C.FREQ_HZ
+
+    # Baseline: clock tree + leakage on every MAC + die-size wiring term.
     # Active-wiring extent only: TSV keep-out zones enlarge the die but
     # carry no clocked wiring, so they do not add to the clock spine.
-    del tech
-    return math.sqrt(n_macs_per_tier * C.A_MAC_UM2)
+    side = np.sqrt(n_per_tier * C.A_MAC_UM2)
+    p_base = n_total * (C.P_CLK_LEAK_PER_MAC_W + C.P_WIRE_PER_MAC_PER_UM_W * side)
+
+    # Useful compute.
+    p_mac = act.mac_ops_total * C.E_MAC_OP_J / t_s
+
+    # In-plane streaming.
+    if dataflow in ("os", "dos"):
+        kl = _ceil_div(K, L)
+        folds = _ceil_div(M, R) * _ceil_div(N, Cc)
+        a_hops = np.minimum(M, R) * kl * Cc * folds * L
+        b_hops = kl * np.minimum(N, Cc) * R * folds * L
+        p_hop = (a_hops + b_hops) * C.E_HOP_J / t_s
+    else:
+        p_hop = act.hlink_hops_total * C.E_HOP_J / t_s
+
+    # Vertical nets (3D only): bit-level activity x per-bit cap energy.
+    cap = np.where(tech == "tsv", C.C_TSV_F, C.C_MIV_F)
+    e_bit = 0.5 * cap * C.VDD**2
+    n_vbits = n_per_tier * (L - 1) * C.VLINK_BITS
+    p_v = np.where(
+        (L > 1) & (tech != "2d") & (act.vlink_hops_total > 0),
+        C.ALPHA_V * n_vbits * C.FREQ_HZ * e_bit,
+        0.0,
+    )
+
+    total = p_base + p_mac + p_hop + p_v
+    peak = total + n_total * C.E_MAC_PEAK_J * C.FREQ_HZ
+    clk_leak = n_total * C.P_CLK_LEAK_PER_MAC_W
+    return {
+        "total_w": total,
+        "peak_w": peak,
+        "static_w": p_base,
+        "dynamic_w": p_mac + p_hop + p_v,
+        "clk_leak_w": clk_leak,
+        "die_wire_w": p_base - clk_leak,
+        "mac_dyn_w": p_mac,
+        "hlink_w": p_hop,
+        "vlink_w": p_v,
+        "cycles": act.cycles,
+    }
 
 
 def array_power(
@@ -57,52 +124,24 @@ def array_power(
     """Average + peak power of an array running the (M,K,N) GEMM.
 
     ``rows, cols`` are per-tier dimensions; ``tech`` selects the
-    vertical-interconnect technology ('2d' forces tiers == 1).
+    vertical-interconnect technology ('2d' forces tiers == 1). Scalar
+    wrapper over ``array_power_batched`` (batch of one).
     """
     if tech == "2d":
         assert tiers == 1, "2D array cannot have tiers"
-    act = dos_activity(M, K, N, rows, cols, tiers)
-    n_per_tier = rows * cols
-    n_total = n_per_tier * tiers
-    t_s = act.cycles / C.FREQ_HZ
-
-    # Baseline: clock tree + leakage on every MAC + die-size wiring term.
-    side = _die_side_um(n_per_tier, tech)
-    p_base = n_total * (C.P_CLK_LEAK_PER_MAC_W + C.P_WIRE_PER_MAC_PER_UM_W * side)
-
-    # Useful compute.
-    p_mac = act.mac_ops_total * C.E_MAC_OP_J / t_s
-
-    # In-plane streaming: operands traverse the *full* array width/height
-    # (systolic shifting does not stop at the useful region) - this is
-    # the 2D array's hidden cost when R,C exceed the active M,N tile.
-    kl = -(-K // tiers)
-    a_hops = min(M, rows) * kl * cols * (-(-M // rows)) * (-(-N // cols)) * tiers
-    b_hops = kl * min(N, cols) * rows * (-(-M // rows)) * (-(-N // cols)) * tiers
-    p_hop = (a_hops + b_hops) * C.E_HOP_J / t_s
-
-    # Vertical nets (3D only): bit-level activity x per-bit cap energy.
-    p_v = 0.0
-    if tiers > 1:
-        cap = C.C_TSV_F if tech == "tsv" else C.C_MIV_F
-        n_vbits = n_per_tier * (tiers - 1) * C.VLINK_BITS
-        e_bit = 0.5 * cap * C.VDD**2
-        p_v = C.ALPHA_V * n_vbits * C.FREQ_HZ * e_bit
-
-    total = p_base + p_mac + p_hop + p_v
-    peak = total + n_total * C.E_MAC_PEAK_J * C.FREQ_HZ
+    r = array_power_batched(
+        np.array([M]), np.array([K]), np.array([N]),
+        np.array([rows]), np.array([cols]), np.array([tiers]), np.array([tech]),
+    )
     return PowerReport(
         tech=tech,
-        total_w=total,
-        peak_w=peak,
+        total_w=float(r["total_w"][0]),
+        peak_w=float(r["peak_w"][0]),
         components={
-            "clk_leak_w": n_total * C.P_CLK_LEAK_PER_MAC_W,
-            "die_wire_w": p_base - n_total * C.P_CLK_LEAK_PER_MAC_W,
-            "mac_dyn_w": p_mac,
-            "hlink_w": p_hop,
-            "vlink_w": p_v,
+            k: float(r[k][0])
+            for k in ("clk_leak_w", "die_wire_w", "mac_dyn_w", "hlink_w", "vlink_w")
         },
-        runtime_cycles=act.cycles,
+        runtime_cycles=float(r["cycles"][0]),
     )
 
 

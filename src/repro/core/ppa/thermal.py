@@ -34,7 +34,12 @@ import numpy as np
 from .power import array_power
 from . import constants as C
 
-__all__ = ["ThermalReport", "solve_stack", "thermal_report"]
+__all__ = [
+    "ThermalReport",
+    "solve_stack",
+    "thermal_report",
+    "lumped_tier_temps",
+]
 
 _GRID = 24  # cells per die side
 
@@ -120,6 +125,85 @@ def solve_stack(q_w, cell_area_mm2, tiers: int, tech: str):
         return T_new, jnp.max(jnp.abs(T_new - T)), it + 1
 
     T, _, _ = jax.lax.while_loop(cond, body, (T0, jnp.inf, 0))
+    return T
+
+
+def lumped_tier_temps(q_tiers_w, footprint_mm2, tiers, tech, macs_per_tier):
+    """Batched steady-state *lumped* tier temperatures (one node per tier).
+
+    The engine's vectorized thermal path: where ``solve_stack`` resolves
+    in-die gradients on a (tiers, g, g) grid for one design,
+    this collapses each tier to a single thermal node and solves the
+    whole batch of tier chains in one tridiagonal sweep — the same
+    physics (vertical ILD+TSV conduction, bottom-tier heatsink, edge
+    spreading scaling with perimeter) at die granularity.
+
+    Args (broadcast over the batch dim B):
+      q_tiers_w:     (B, Lmax) per-tier power [W]; entries beyond a
+                     design's tier count are ignored.
+      footprint_mm2: (B,) per-tier die footprint.
+      tiers:         (B,) int tier counts (1..Lmax).
+      tech:          (B,) str array ('2d'|'tsv'|'miv') — 'tsv' adds the
+                     via copper to the vertical path.
+      macs_per_tier: (B,) int — sizes the per-die TSV copper share.
+
+    Returns (B, Lmax) float64 temperatures [C]; padded tiers read
+    ambient. Tier 0 is the bottom (heatsink-side) tier.
+    """
+    q = np.asarray(q_tiers_w, dtype=np.float64)
+    B, Lmax = q.shape
+    footprint_mm2 = np.broadcast_to(np.asarray(footprint_mm2, np.float64), (B,))
+    tiers = np.broadcast_to(np.asarray(tiers, np.int64), (B,))
+    tech = np.broadcast_to(np.asarray(tech), (B,))
+    macs_per_tier = np.broadcast_to(np.asarray(macs_per_tier, np.float64), (B,))
+
+    a_m2 = footprint_mm2 * 1e-6
+    g_ild = C.K_ILD_W_MK * a_m2 / (C.T_ILD_UM * 1e-6)
+    a_cu = macs_per_tier * C.VLINK_BITS * (C.A_TSV_UM2 * 0.25) * 1e-12
+    g_via = C.K_CU_W_MK * a_cu / (C.T_TIER_SI_UM * 1e-6)
+    g_vert = np.where(tech == "tsv", g_ild + g_via, g_ild)
+    g_sink = footprint_mm2 / C.R_HEATSINK_KMM2_W
+    g_edge = C.G_EDGE_PER_MM_W_K * 4.0 * np.sqrt(footprint_mm2)
+
+    idx = np.arange(Lmax)[None, :]
+    alive = idx < tiers[:, None]
+    has_below = alive & (idx > 0)
+    has_above = idx < (tiers[:, None] - 1)
+
+    # Tridiagonal system: diag * T_i - g_vert * (T_below + T_above) = rhs.
+    diag = (
+        g_edge[:, None] * alive
+        + g_sink[:, None] * (idx == 0)
+        + g_vert[:, None] * has_below
+        + g_vert[:, None] * has_above
+    )
+    sub = np.where(has_below, -g_vert[:, None], 0.0)
+    sup = np.where(has_above, -g_vert[:, None], 0.0)
+    rhs = (
+        np.where(alive, q, 0.0)
+        + g_edge[:, None] * alive * C.T_AMBIENT_C
+        + g_sink[:, None] * (idx == 0) * C.T_AMBIENT_C
+    )
+    # Padded nodes: identity rows pinned to ambient.
+    diag = np.where(alive, diag, 1.0)
+    rhs = np.where(alive, rhs, C.T_AMBIENT_C)
+
+    # Vectorized Thomas algorithm over the batch (Lmax <= 16 is tiny).
+    # Degenerate rows (zero-area design points) divide 0/0 and yield
+    # NaN, which callers mask via their validity arrays.
+    with np.errstate(invalid="ignore", divide="ignore"):
+        cp = np.zeros_like(q)
+        dp = np.zeros_like(q)
+        cp[:, 0] = sup[:, 0] / diag[:, 0]
+        dp[:, 0] = rhs[:, 0] / diag[:, 0]
+        for i in range(1, Lmax):
+            denom = diag[:, i] - sub[:, i] * cp[:, i - 1]
+            cp[:, i] = sup[:, i] / denom
+            dp[:, i] = (rhs[:, i] - sub[:, i] * dp[:, i - 1]) / denom
+        T = np.empty_like(q)
+        T[:, -1] = dp[:, -1]
+        for i in range(Lmax - 2, -1, -1):
+            T[:, i] = dp[:, i] - cp[:, i] * T[:, i + 1]
     return T
 
 

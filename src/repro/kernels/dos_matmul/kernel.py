@@ -27,6 +27,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..._jax_compat import pallas_tpu_compiler_params
+
+_CompilerParams = pallas_tpu_compiler_params()
+
 __all__ = ["dos_matmul_kernel", "dos_matmul_pallas"]
 
 
@@ -86,7 +90,7 @@ def dos_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..._jax_compat import pallas_tpu_compiler_params
+
+_CompilerParams = pallas_tpu_compiler_params()
+
 from .ref import NEG_INF
 
 __all__ = ["flash_attention_pallas"]
@@ -155,7 +159,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, _LANES), jnp.float32),
             pltpu.VMEM((bq, _LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

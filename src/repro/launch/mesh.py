@@ -8,7 +8,7 @@ use, and smoke tests must keep seeing 1 device.
 
 from __future__ import annotations
 
-import jax
+from repro._jax_compat import make_mesh as _make_mesh
 
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
@@ -19,14 +19,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     or pipeline stages with --pipeline."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many devices the test environment has."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))

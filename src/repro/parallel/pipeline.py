@@ -24,6 +24,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from .._jax_compat import pcast as _pcast
+from .._jax_compat import shard_map as _shard_map
+
 from jax.sharding import PartitionSpec as P
 
 from ..models.decoder import _attn_mlp_block, layer_metadata
@@ -80,7 +84,7 @@ def make_gpipe_loss(cfg, mesh, *, n_stages: int, n_microbatches: int,
         other_axes = tuple(a for a in mesh.axis_names if a != stage_axis)
 
         @functools.partial(
-            jax.shard_map,
+            _shard_map,
             mesh=mesh,
             in_specs=(
                 P(stage_axis),  # layers: stage dim sharded
@@ -126,8 +130,8 @@ def make_gpipe_loss(cfg, mesh, *, n_stages: int, n_microbatches: int,
                 return (act_next, loss_sum), None
 
             # carries become stage-varying after my-dependent selects
-            act0_v = jax.lax.pcast(act0, (stage_axis,), to="varying")
-            loss0_v = jax.lax.pcast(jnp.float32(0), (stage_axis,), to="varying")
+            act0_v = _pcast(act0, (stage_axis,), to="varying")
+            loss0_v = _pcast(jnp.float32(0), (stage_axis,), to="varying")
             (_, loss_sum), _ = jax.lax.scan(
                 tick, (act0_v, loss0_v), jnp.arange(n_ticks)
             )

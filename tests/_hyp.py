@@ -1,0 +1,30 @@
+"""Hypothesis, or graceful stand-ins when it isn't installed.
+
+``from _hyp import given, settings, st`` gives test modules the real
+hypothesis API when available; otherwise ``@given(...)`` marks just the
+property-based tests as skipped, so the deterministic tests in the same
+module still collect and run under the tier-1 ``pytest -x -q`` command.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _Strategies:
+        """Accepts any strategy construction and returns inert objects."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -1,8 +1,9 @@
 """Paper Eqs. 1-2 and the array-shape/tier optimizers (property-based)."""
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+
+from _hyp import given, settings, st  # property tests skip w/o hypothesis
 
 from repro.core.analytical import (
     mac_threshold, optimal_tiers, optimize_array_2d, optimize_array_3d,

@@ -1,0 +1,357 @@
+"""Batched evaluation engine: equivalence to the cycle-level simulator,
+bit-for-bit regression against the legacy per-point DSE loops, PPA
+batched-vs-scalar consistency, Pareto utility, and the JAX backend.
+
+These tests deliberately avoid hypothesis so they always run under the
+tier-1 ``pytest -x -q`` command.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.analytical import (
+    ArrayPlan,
+    mac_threshold,
+    optimal_tiers,
+    optimize_array_2d,
+    optimize_array_3d,
+    speedup_3d,
+    tau_2d,
+    tau_is,
+    tau_ws,
+)
+from repro.core.dse import fig5_sweep, fig6_sweep, fig7_scatter, random_workloads
+from repro.core.engine import (
+    DesignGrid,
+    evaluate,
+    optimal_tiers_batched,
+    pareto_frontier,
+)
+
+WORKLOADS = [(64, 12100, 147), (512, 784, 128), (35, 2560, 4096), (7, 33, 9)]
+
+
+# ---------------------------------------------------------------------------
+# Engine vs cycle-level simulator (ground truth for Eqs. 1-2)
+# ---------------------------------------------------------------------------
+
+def test_engine_cycles_match_simulator():
+    from repro.core.systolic import simulate_dos_3d, simulate_os_2d
+
+    rng = np.random.default_rng(0)
+    cases = [(5, 9, 4, 2, 3, 1), (4, 12, 6, 3, 2, 3), (8, 7, 8, 4, 4, 2)]
+    rows = np.array([c[3] for c in cases])
+    cols = np.array([c[4] for c in cases])
+    tiers = np.array([c[5] for c in cases])
+    for i, (M, K, N, R, C, L) in enumerate(cases):
+        grid = DesignGrid.explicit([(M, K, N)], rows[i], cols[i], tiers[i])
+        res = evaluate(grid, metrics=("perf",))
+        A = rng.normal(size=(M, K)).astype(np.float32)
+        B = rng.normal(size=(K, N)).astype(np.float32)
+        sim = (
+            simulate_os_2d(A, B, R, C)
+            if L == 1
+            else simulate_dos_3d(A, B, R, C, L)
+        )
+        assert res.cycles[0, 0] == sim.cycles, (M, K, N, R, C, L)
+        np.testing.assert_allclose(np.asarray(sim.out), A @ B, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Bit-for-bit regression: engine-backed sweeps == legacy per-point loops
+# ---------------------------------------------------------------------------
+
+def _legacy_fig5(mac_budgets, ks, tiers, M=64, N=147, mode="opt"):
+    out = {}
+    for n in mac_budgets:
+        for k in ks:
+            out[(n, k)] = [speedup_3d(M, k, N, n, l, mode) for l in tiers]
+    return tiers, out
+
+
+def _legacy_fig6(mac_budgets, ns, ks, M=64, tiers=4, mode="opt"):
+    out, thresholds = {}, {}
+    for n_dim in ns:
+        thresholds[n_dim] = mac_threshold(M, n_dim)
+        for k in ks:
+            out[(n_dim, k)] = [
+                speedup_3d(M, k, n_dim, b, tiers, mode) for b in mac_budgets
+            ]
+    return mac_budgets, out, thresholds
+
+
+def test_fig5_matches_legacy_loop():
+    budgets, ks, tiers = (2**12, 2**16), (255, 12100), tuple(range(1, 9))
+    t_new, out_new = fig5_sweep(budgets, ks, tiers)
+    t_old, out_old = _legacy_fig5(budgets, ks, tiers)
+    assert t_new == t_old and out_new == out_old
+
+
+def test_fig6_matches_legacy_loop():
+    budgets, ns, ks = tuple(2**p for p in range(10, 15)), (147, 1024), (784,)
+    b_new, out_new, th_new = fig6_sweep(budgets, ns, ks)
+    b_old, out_old, th_old = _legacy_fig6(budgets, ns, ks)
+    assert b_new == b_old and out_new == out_old and th_new == th_old
+
+
+def test_fig7_matches_legacy_loop():
+    budgets = (2**14, 2**16)
+    res = fig7_scatter(budgets, n_workloads=40, seed=0, max_tiers=8)
+    wl = random_workloads(40, 0)
+    for fig7, b in zip(res, budgets):
+        legacy = np.array([optimal_tiers(m, k, n, b, 8)[0] for m, k, n in wl])
+        assert np.array_equal(fig7.optimal_tiers, legacy)
+        assert fig7.median == float(np.median(legacy))
+
+
+def test_engine_matches_scalar_optimizers():
+    budgets, tiers = (2**12, 2**18), range(1, 9)
+    grid = DesignGrid.product(WORKLOADS, budgets, tiers)
+    res = evaluate(grid, metrics=("perf",))
+    for wi, (m, k, n) in enumerate(WORKLOADS):
+        for bi, b in enumerate(budgets):
+            for ti, l in enumerate(tiers):
+                p = bi * 8 + ti
+                plan = optimize_array_3d(m, k, n, b, l)
+                assert res.rows[wi, p] == plan.rows
+                assert res.cols[wi, p] == plan.cols
+                assert res.cycles[wi, p] == plan.cycles
+                assert res.speedup[wi, p] == speedup_3d(m, k, n, b, l)
+
+
+def test_optimal_tiers_batched_matches_scalar():
+    budgets = (2**14, 2**18)
+    best, cyc = optimal_tiers_batched(WORKLOADS, budgets, max_tiers=12)
+    for wi, (m, k, n) in enumerate(WORKLOADS):
+        for bi, b in enumerate(budgets):
+            l, t = optimal_tiers(m, k, n, b, 12)
+            assert best[wi, bi] == l and cyc[wi, bi] == t
+
+
+def test_jax_backend_matches_numpy():
+    grid = DesignGrid.product(WORKLOADS, (2**12, 2**16), range(1, 9))
+    a = evaluate(grid, backend="numpy", metrics=("perf",))
+    b = evaluate(grid, backend="jax", metrics=("perf",))
+    assert np.array_equal(a.rows, b.rows)
+    assert np.array_equal(a.cols, b.cols)
+    assert np.array_equal(a.cycles, b.cycles)
+    assert np.array_equal(a.speedup, b.speedup)
+
+
+def test_chunking_does_not_change_results():
+    grid = DesignGrid.product(WORKLOADS, (2**14,), range(1, 9))
+    a = evaluate(grid, metrics=("perf",), chunk=3)
+    b = evaluate(grid, metrics=("perf",), chunk=10_000)
+    assert np.array_equal(a.cycles, b.cycles)
+    assert np.array_equal(a.rows, b.rows)
+
+
+# ---------------------------------------------------------------------------
+# All four dataflows
+# ---------------------------------------------------------------------------
+
+def test_ws_is_runtime_models():
+    # l = 1 literals: fill/drain + temporal dim, folds over spatial dims.
+    assert tau_ws(64, 300, 128, 16, 8) == (32 + 8 + 64 - 2) * 8 * 38
+    assert tau_is(64, 300, 128, 16, 8) == (32 + 8 + 128 - 2) * 4 * 38
+    # Splitting the temporal dim across tiers shortens every fold.
+    assert tau_ws(64, 300, 128, 16, 8, 4) < tau_ws(64, 300, 128, 16, 8, 1)
+    assert tau_is(64, 300, 128, 16, 8, 4) < tau_is(64, 300, 128, 16, 8, 1)
+
+
+@pytest.mark.parametrize("dataflow", ["os", "ws", "is", "dos"])
+def test_engine_covers_all_dataflows(dataflow):
+    grid = DesignGrid.product(
+        WORKLOADS[:2], (2**12, 2**14), range(1, 5), dataflow=dataflow
+    )
+    res = evaluate(grid)
+    assert np.all(res.valid)
+    assert np.all(np.isfinite(res.cycles))
+    assert np.all(res.power_w > 0)
+    util = res.utilization
+    assert np.all((util > 0) & (util <= 1.0 + 1e-12))
+    if dataflow in ("ws", "is"):
+        assert np.all(res.vlink_act == 0.0)  # no cross-tier traffic
+
+
+# ---------------------------------------------------------------------------
+# Utilization (ArrayPlan + engine agree)
+# ---------------------------------------------------------------------------
+
+def test_array_plan_utilization():
+    M, K, N = 128, 300, 128
+    plan = optimize_array_3d(M, K, N, 3 * 128 * 128, 3)
+    want = (M * K * N) / (plan.n_macs_used * plan.cycles)
+    assert plan.utilization == pytest.approx(want)
+    assert 0 < plan.utilization <= 1
+    # A perfectly filled array at l=1: util -> MN*K / (MN * (2R+C+K-2)).
+    p2 = optimize_array_2d(8, 512, 8, 64)
+    assert p2.utilization == pytest.approx(
+        8 * 512 * 8 / (p2.n_macs_used * p2.cycles)
+    )
+    # Hand-built plans (no workload attached) stay NaN.
+    assert np.isnan(ArrayPlan(8, 8, 1, 100.0, 64).utilization)
+
+
+def test_engine_utilization_matches_plan():
+    grid = DesignGrid.product([(64, 12100, 147)], (2**14,), (1, 4))
+    res = evaluate(grid, metrics=("perf",))
+    for p, l in enumerate((1, 4)):
+        plan = optimize_array_3d(64, 12100, 147, 2**14, l)
+        assert res.utilization[0, p] == pytest.approx(plan.utilization)
+
+
+# ---------------------------------------------------------------------------
+# PPA batched entry points == scalar reports; thermal sanity
+# ---------------------------------------------------------------------------
+
+def test_power_batched_matches_scalar():
+    from repro.core.ppa import array_power, array_power_batched, table2_setup
+
+    setups = list(table2_setup().values())
+    batched = array_power_batched(
+        np.array([s["M"] for s in setups]),
+        np.array([s["K"] for s in setups]),
+        np.array([s["N"] for s in setups]),
+        np.array([s["rows"] for s in setups]),
+        np.array([s["cols"] for s in setups]),
+        np.array([s["tiers"] for s in setups]),
+        np.array([s["tech"] for s in setups]),
+    )
+    for i, s in enumerate(setups):
+        rep = array_power(**s)
+        assert batched["total_w"][i] == rep.total_w
+        assert batched["peak_w"][i] == rep.peak_w
+        assert batched["cycles"][i] == rep.runtime_cycles
+
+
+def test_area_batched_matches_scalar():
+    from repro.core.ppa import array_area_um2, array_area_um2_batched
+
+    n = np.array([2**14, 2**18, 2**18])
+    l = np.array([1, 4, 12])
+    tech = np.array(["2d", "tsv", "miv"])
+    total, footprint, overhead = array_area_um2_batched(n, l, tech)
+    for i in range(3):
+        rep = array_area_um2(int(n[i]), int(l[i]), str(tech[i]))
+        assert total[i] == rep.total_um2
+        assert footprint[i] == rep.footprint_um2
+        assert overhead[i] == rep.vlink_overhead
+
+
+def test_lumped_thermal_trends():
+    from repro.core.ppa import lumped_tier_temps
+    from repro.core.ppa.constants import T_AMBIENT_C
+
+    # Same total power: a 3-tier stack runs hotter than the 2D die, and
+    # upper tiers (far from the heatsink) are hottest; padded = ambient.
+    q3 = np.array([[3.0, 3.0, 3.0]])
+    q1 = np.array([[9.0, 0.0, 0.0]])
+    T3 = lumped_tier_temps(q3, [6.55], [3], ["tsv"], [16384])
+    T1 = lumped_tier_temps(q1, [19.7], [1], ["2d"], [49284])
+    assert T3[0, 2] >= T3[0, 1] >= T3[0, 0] > T_AMBIENT_C
+    assert T3.max() > T1.max()
+    assert T1[0, 1] == T1[0, 2] == T_AMBIENT_C  # padded tiers
+    # MIV (no via copper) runs hotter than TSV at equal power.
+    Tm = lumped_tier_temps(q3, [6.55], [3], ["miv"], [16384])
+    assert Tm.max() >= T3.max()
+
+
+def test_engine_full_metrics_sane():
+    grid = DesignGrid.product(WORKLOADS[:2], (2**14, 2**16), range(1, 5))
+    res = evaluate(grid)
+    v = res.valid
+    for name in ("power_w", "energy_j", "t_max_c", "area_um2"):
+        arr = getattr(res, name)
+        assert np.all(np.isfinite(arr[v])), name
+        assert np.all(arr[v] > 0), name
+    assert np.all(res.within_thermal_budget[v])
+    # energy = power * time
+    t_s = res.cycles / 1e9
+    np.testing.assert_allclose(res.energy_j, res.power_w * t_s)
+
+
+# ---------------------------------------------------------------------------
+# Pareto utility
+# ---------------------------------------------------------------------------
+
+def test_pareto_frontier_basic():
+    pts = np.array(
+        [[1.0, 2.0], [2.0, 1.0], [2.0, 2.0], [3.0, 3.0], [1.0, 2.0], [np.inf, 0.0]]
+    )
+    mask = pareto_frontier(pts)
+    assert mask.tolist() == [True, True, False, False, True, False]
+
+
+def test_pareto_mask_on_grid():
+    grid = DesignGrid.product([(64, 12100, 147)], (2**12, 2**14, 2**16), range(1, 9))
+    res = evaluate(grid)
+    mask = res.pareto_mask(("cycles", "area_um2", "power_w"))
+    assert mask.shape == res.cycles.shape
+    assert 0 < mask.sum() <= mask.size
+    # every dominated point is beaten somewhere on all three axes
+    front = np.stack(
+        [res.cycles[mask], res.area_um2[mask], res.power_w[mask]], axis=1
+    )
+    dom = np.stack(
+        [res.cycles[~mask], res.area_um2[~mask], res.power_w[~mask]], axis=1
+    )
+    for d in dom[np.isfinite(dom).all(1)]:
+        assert np.any((front <= d).all(1) & (front < d).any(1))
+
+
+# ---------------------------------------------------------------------------
+# Advisor routes through the engine
+# ---------------------------------------------------------------------------
+
+def test_rank_candidates_matches_scalar_advisor():
+    from repro.core.advisor import GemmShard, choose_sharding, rank_candidates
+
+    wl = [(8, 8192, 8192), (1 << 20, 4096, 4096), (128, 256, 512), (64, 64, 64)]
+    names, totals = rank_candidates(wl, 16)
+    assert totals.shape == (4, 4)
+    for i, (m, k, n) in enumerate(wl):
+        best = choose_sharding(GemmShard(M=m, K=k, N=n, axis=16))
+        assert names[i] == best.name
+        assert totals[i].min() == pytest.approx(best.total_s)
+
+
+def test_optimize_rc_batched_matches_scalar():
+    from repro.core.analytical import INVALID_CYCLES, optimize_rc_batched
+
+    M = np.array([64, 512, 35, 8])
+    K = np.array([12100, 784, 2560, 8])
+    N = np.array([147, 128, 4096, 8])
+    for b, l in [(2**14, 1), (2**16, 3), (2**18, 12)]:
+        r, c, t = optimize_rc_batched(M, K, N, b, l)
+        for i in range(4):
+            plan = optimize_array_3d(int(M[i]), int(K[i]), int(N[i]), b, l)
+            assert (r[i], c[i], float(t[i])) == (plan.rows, plan.cols, plan.cycles)
+    # broadcasting + invalid budget sentinel
+    r, c, t = optimize_rc_batched(8, 8, 8, np.array([4, 64]), np.array([8, 2]))
+    assert t[0] == INVALID_CYCLES and t[1] != INVALID_CYCLES
+
+
+def test_design_grid_broadcasts_point_fields():
+    # scalar tiers x vector budgets (and the reverse) must both work.
+    g = DesignGrid(workloads=[(64, 100, 64)], tiers=4, mac_budgets=[2**14, 2**16])
+    assert g.n_points == 2 and g.tiers.tolist() == [4, 4]
+    g2 = DesignGrid(workloads=[(64, 100, 64)], tiers=[1, 2, 4], mac_budgets=2**14)
+    assert g2.n_points == 3 and g2.mac_budgets.tolist() == [2**14] * 3
+    assert np.array_equal(
+        evaluate(g2, metrics=("perf",)).cycles,
+        evaluate(
+            DesignGrid.product([(64, 100, 64)], [2**14], [1, 2, 4]),
+            metrics=("perf",),
+        ).cycles,
+    )
+    with pytest.raises(ValueError, match="incompatible lengths"):
+        DesignGrid(workloads=[(1, 2, 3)], tiers=[1, 2], mac_budgets=[1, 2, 3])
+
+
+def test_invalid_points_masked():
+    # per-tier budget < 1 -> invalid, inf cycles, NaN downstream.
+    grid = DesignGrid.product([(8, 8, 8)], (4,), (2, 8, 16))
+    res = evaluate(grid)
+    assert res.valid[0].tolist() == [True, False, False]
+    assert np.isinf(res.cycles[0, 1]) and np.isnan(res.speedup[0, 2])

@@ -3,7 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # property tests skip w/o hypothesis
 
 from repro.kernels.ssm_scan import (
     ssm_scan, ssm_scan_chunked_jnp, ssm_scan_ref,

@@ -23,8 +23,7 @@ def test_loss_invariant_across_meshes_and_strategies():
         ref = float(model.loss(params, batch))
         for (d, m) in [(2, 4), (4, 2), (8, 1), (1, 8)]:
             for strat in ("dos", "megatron"):
-                mesh = jax.make_mesh((d, m), ("data", "model"),
-                    axis_types=(jax.sharding.AxisType.Auto,)*2)
+                mesh = jax.make_mesh((d, m), ("data", "model"))
                 rules = ShardingRules(mesh, strategy=strat, fsdp=True)
                 ps = param_sharding(model.defs, rules)
                 with use_rules(rules), mesh:
@@ -49,14 +48,12 @@ def test_elastic_checkpoint_restore_across_meshes(tmp_path):
         model = build(cfg)
         params = model.init(jax.random.PRNGKey(0))
         # save on a (4, 2) mesh
-        mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh_a = jax.make_mesh((4, 2), ("data", "model"))
         ps_a = param_sharding(model.defs, ShardingRules(mesh_a, "dos", fsdp=True))
         pa = jax.device_put(params, ps_a)
         checkpointer.save(r"{tmp_path}", 3, pa)
         # restore on a (2, 2) mesh — "lost a pod", half the devices
-        mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh_b = jax.make_mesh((2, 2), ("data", "model"))
         ps_b = param_sharding(model.defs, ShardingRules(mesh_b, "dos", fsdp=True))
         pb = elastic_restore(r"{tmp_path}", 3, pa, ps_b)
         for x, y in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
@@ -75,8 +72,7 @@ def test_pipeline_matches_reference():
         cfg = dataclasses.replace(reduced(get_config("smollm-135m")), n_layers=4)
         model = build(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        mesh = jax.make_mesh((4,), ("pod",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("pod",))
         toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab)
         batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
         ref = float(model.loss(params, batch))
@@ -95,8 +91,7 @@ def test_compressed_grad_sync():
     out = run_multidevice("""
         import jax, jax.numpy as jnp
         from repro.parallel.compression import compressed_psum_grads, init_error_state
-        mesh = jax.make_mesh((8,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((8,), ("data",))
         g = {"w": jnp.linspace(-1, 1, 256).reshape(16, 16)}
         e = init_error_state(g)
         gh, ne = jax.jit(lambda g, e: compressed_psum_grads(g, e, mesh))(g, e)
@@ -122,9 +117,9 @@ def test_dryrun_cell_mini_mesh():
         from repro.launch.steps import make_train_step, make_serve_step
         from repro.optim import OptConfig
         from repro.analysis.roofline import parse_collectives
+        from repro._jax_compat import unwrap_cost_analysis
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         cfg = reduced(REGISTRY["gemma3-1b"])
         model = build(cfg)
         shape = ShapeConfig("t", 64, 4, "train")
@@ -135,7 +130,7 @@ def test_dryrun_cell_mini_mesh():
             lowered = jax.jit(step, in_shardings=plan.in_shardings,
                               out_shardings=plan.out_shardings).lower(*plan.abstract)
             compiled = lowered.compile()
-        cost = compiled.cost_analysis()
+        cost = unwrap_cost_analysis(compiled.cost_analysis())
         assert cost.get("flops", 0) > 0
         coll = parse_collectives(compiled.as_text())
         assert coll.wire_bytes > 0  # dOS must produce collectives
@@ -148,7 +143,7 @@ def test_dryrun_cell_mini_mesh():
         with use_rules(rules), mesh:
             c2 = jax.jit(serve, in_shardings=plan_d.in_shardings,
                          out_shardings=plan_d.out_shardings).lower(*plan_d.abstract).compile()
-        assert c2.cost_analysis().get("flops", 0) > 0
+        assert unwrap_cost_analysis(c2.cost_analysis()).get("flops", 0) > 0
         print("DRYRUN_MINI_OK")
     """)
     assert "DRYRUN_MINI_OK" in out
@@ -165,8 +160,7 @@ def test_moe_expert_parallel_matches_oracle():
         model = build(cfg)
         params = model.init(jax.random.PRNGKey(0))
         lp = jax.tree.map(lambda a: a[0], params["layers"])["ffn"]
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
         ref = moe_block(lp, x, cfg)
         with mesh:

@@ -1,7 +1,8 @@
 """Cycle-level simulator: dOS computes exact GEMMs, cycles match Eqs."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # property tests skip w/o hypothesis
 
 from repro.core.analytical import tau_2d, tau_3d
 from repro.core.systolic import simulate_dos_3d, simulate_os_2d
