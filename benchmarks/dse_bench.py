@@ -69,9 +69,14 @@ def main():
     ap.add_argument("--n", type=int, default=300, help="number of workloads")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--jax", action="store_true", help="also time the JAX backend")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep (40 workloads) — the CI smoke step")
     args = ap.parse_args()
-    out = run(args.n, args.seed, args.jax)
-    (HERE / "BENCH_dse.json").write_text(json.dumps(out, indent=1))
+    out = run(40 if args.smoke else args.n, args.seed, args.jax)
+    # smoke runs get their own artifact so the canonical full-sweep
+    # numbers (committed + uploaded by CI) are never clobbered
+    name = "BENCH_dse_smoke.json" if args.smoke else "BENCH_dse.json"
+    (HERE / name).write_text(json.dumps(out, indent=1))
     print(json.dumps(out, indent=1))
     for k in out:
         if k.startswith("speedup"):

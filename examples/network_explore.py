@@ -1,0 +1,75 @@
+"""Network-level design-space exploration, interactive.
+
+Lower any model-zoo architecture to its GEMM workload stream and
+schedule it end-to-end on the 3D-array design grid: per-layer-optimal
+vs one fixed array design, with thermal feasibility masking.
+
+Run:  PYTHONPATH=src python examples/network_explore.py --arch qwen2.5-3b
+      PYTHONPATH=src python examples/network_explore.py \\
+          --arch deepseek-moe-16b --shape decode_32k --tech miv
+Add --stream to print the lowered per-layer GEMM stream, and
+--thermal-limit to tighten the junction budget and watch designs drop
+off the feasible set.
+"""
+
+import argparse
+
+from repro.configs import REGISTRY, SHAPES
+from repro.core.engine import schedule
+from repro.core.network import lower_network
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=sorted(REGISTRY))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES),
+                    help="default: train_4k, prefill_32k and decode_32k")
+    ap.add_argument("--tech", default="tsv", choices=["tsv", "miv"])
+    ap.add_argument("--dataflow", default="dos", choices=["dos", "ws", "is"])
+    ap.add_argument("--thermal-limit", type=float, default=None,
+                    help="junction limit [C]; default: the 105C budget")
+    ap.add_argument("--stream", action="store_true",
+                    help="print the lowered GEMM stream per shape")
+    args = ap.parse_args()
+
+    cfg = REGISTRY[args.arch]
+    shapes = [args.shape] if args.shape else ["train_4k", "prefill_32k", "decode_32k"]
+    kw = dict(dataflow=args.dataflow, tech=args.tech)
+    if args.thermal_limit is not None:
+        kw["thermal_limit"] = args.thermal_limit
+
+    for shape_name in shapes:
+        shape = SHAPES[shape_name]
+        if shape_name == "long_500k" and not cfg.is_subquadratic:
+            print(f"\n== {shape_name}: skipped (full attention at 500k)")
+            continue
+        stream = lower_network(cfg, shape)
+        print(f"\n== {cfg.name} / {shape_name} ({shape.mode}) — "
+              f"{stream.workloads.shape[0]} unique GEMMs, "
+              f"{stream.n_gemm_invocations} invocations, "
+              f"{stream.total_macs:.3e} MACs")
+        if args.stream:
+            for g in stream.gemms:
+                print(f"   {g.name:16s} M={g.M:<7d} K={g.K:<7d} N={g.N:<7d} "
+                      f"x{g.count}")
+        rep = schedule(stream, **kw)
+        for pol in (rep.per_layer, rep.fixed):
+            if not pol.feasible:
+                print(f"   {pol.policy:9s}: NO feasible design under the "
+                      f"thermal limit ({rep.thermal_limit:.0f} C)")
+                continue
+            d = pol.design if pol.policy == "fixed" else pol.design[0]
+            tag = (f"{int(d[0])}x{int(d[1])}x{int(d[2])}"
+                   + ("" if pol.policy == "fixed" else " (first layer)"))
+            print(f"   {pol.policy:9s}: {pol.total_cycles:.3e} cycles "
+                  f"({pol.time_s*1e3:.2f} ms) | {pol.speedup_vs_2d:.2f}x vs 2D "
+                  f"| {pol.energy_j:.2e} J | EDP {pol.edp_js:.2e} Js "
+                  f"| util {pol.utilization:.2f} | T_max {pol.t_max_c:.0f} C "
+                  f"| {tag}")
+        if rep.n_thermally_masked:
+            print(f"   {rep.n_thermally_masked}/{rep.n_candidates} candidate "
+                  f"designs thermally masked at {rep.thermal_limit:.0f} C")
+
+
+if __name__ == "__main__":
+    main()

@@ -108,7 +108,14 @@ def score_strategies(
     ]
 
 
-def rank_candidates(workloads, axis, **kw):
+def rank_candidates(
+    workloads,
+    axis,
+    mac_budget: int | None = None,
+    tech: str = "tsv",
+    thermal_limit: float | None = None,
+    **kw,
+):
     """Rank all four mesh strategies for a whole batch of GEMMs in one
     engine call.
 
@@ -117,6 +124,15 @@ def rank_candidates(workloads, axis, **kw):
     ``names`` — (n,) array of winning strategy names, ``totals`` — (n,
      4) float64 of total seconds per strategy, columns ordered as
     ``engine.MESH_STRATEGIES``.
+
+    When ``mac_budget`` is given, thermal feasibility becomes a
+    first-class constraint: ``shard_K`` is the paper's dOS — the
+    physically 3D-stacked mapping with ``axis`` tiers — so workloads
+    whose ``axis``-tier stack at that MAC budget would exceed
+    ``thermal_limit`` (default: the junction budget) get ``shard_K``
+    struck from the ranking (total = inf) and fall back to the best
+    scaled-out-2D strategy. The other three strategies replicate or
+    shard without stacking and are never thermally masked.
     """
     wl = np.atleast_2d(np.asarray(workloads, dtype=np.int64))
     scores = score_mesh_strategies(wl[:, 0], wl[:, 1], wl[:, 2], axis, **kw)
@@ -124,6 +140,15 @@ def rank_candidates(workloads, axis, **kw):
         [np.broadcast_to(scores[n]["total_s"], (wl.shape[0],)) for n in MESH_STRATEGIES],
         axis=1,
     )
+    if mac_budget is not None:
+        from .engine import thermal_feasible
+
+        limit = C.THERMAL_BUDGET_C if thermal_limit is None else thermal_limit
+        feas = thermal_feasible(
+            wl, [int(mac_budget)], axis, tech=tech, thermal_limit=limit
+        )[:, 0]
+        totals = totals.copy()
+        totals[~feas, MESH_STRATEGIES.index("shard_K")] = np.inf
     names = np.asarray(MESH_STRATEGIES)[np.argmin(totals, axis=1)]
     return names, totals
 

@@ -56,7 +56,11 @@ from .ppa.thermal import lumped_tier_temps
 __all__ = [
     "DesignGrid",
     "EvalResult",
+    "NetworkReport",
+    "PolicyResult",
     "evaluate",
+    "schedule",
+    "thermal_feasible",
     "optimal_tiers_batched",
     "pareto_frontier",
     "score_mesh_strategies",
@@ -187,6 +191,19 @@ class EvalResult:
     t_max_c: np.ndarray | None = None
     within_thermal_budget: np.ndarray | None = None
 
+    @property
+    def feasible(self) -> np.ndarray:
+        """(W, P) bool — valid AND within the thermal budget.
+
+        The first-class feasibility mask: optima (``pareto_mask``,
+        ``schedule``, the advisor's design ranking) exclude points that
+        are structurally invalid or would exceed the junction limit.
+        Falls back to ``valid`` when thermal was not evaluated.
+        """
+        if self.within_thermal_budget is None:
+            return self.valid
+        return self.valid & self.within_thermal_budget
+
     def to_dict(self) -> dict:
         """Array fields as a plain dict (None entries dropped)."""
         out = {}
@@ -199,10 +216,18 @@ class EvalResult:
         return out
 
     def pareto_mask(
-        self, objectives: Sequence[str] = ("cycles", "area_um2", "power_w")
+        self,
+        objectives: Sequence[str] = ("cycles", "area_um2", "power_w"),
+        feasible_only: bool = True,
     ) -> np.ndarray:
         """(W, P) bool — per-workload Pareto frontier over the named
-        (minimized) metric columns (paper Sec. IV-C/D trade-offs)."""
+        (minimized) metric columns (paper Sec. IV-C/D trade-offs).
+
+        ``feasible_only`` (default) restricts the frontier to
+        thermally feasible points: a design that dominates on
+        latency/area/power but overshoots the junction limit is not a
+        usable optimum. Pass False for the unconstrained frontier.
+        """
         cols = []
         for name in objectives:
             v = getattr(self, name)
@@ -210,6 +235,11 @@ class EvalResult:
                 raise ValueError(f"metric {name!r} was not evaluated")
             cols.append(np.asarray(v, dtype=np.float64))
         stacked = np.stack(cols, axis=-1)  # (W, P, n_obj)
+        if feasible_only:
+            # Infeasible points neither appear on nor dominate the
+            # frontier: blank them out before the scan (pareto_frontier
+            # ignores non-finite rows entirely).
+            stacked = np.where(self.feasible[..., None], stacked, np.inf)
         return np.stack([pareto_frontier(row) for row in stacked])
 
 
@@ -386,13 +416,16 @@ def evaluate(
     backend: str = "numpy",
     metrics: Sequence[str] = _ALL_METRICS,
     chunk: int = _DEFAULT_CHUNK,
+    thermal_limit: float = C.THERMAL_BUDGET_C,
 ) -> EvalResult:
     """Evaluate every (workload, design point) pair of the grid at once.
 
     ``metrics`` selects result groups: 'perf' (always computed),
     'area', 'power', 'thermal' (thermal implies power implies area).
     ``chunk`` bounds the working-set of the (B, R_max) search
-    intermediates; results are independent of it.
+    intermediates; results are independent of it. ``thermal_limit``
+    sets the junction temperature [C] behind
+    ``within_thermal_budget`` / ``feasible``.
     """
     metrics = set(metrics)
     unknown = metrics - set(_ALL_METRICS)
@@ -544,7 +577,7 @@ def evaluate(
         t_max = np.where(valid, np.max(np.where(alive, T, -np.inf), axis=1), np.nan)
         res.update(
             t_max_c=t_max.reshape(W, P),
-            within_thermal_budget=(t_max < C.THERMAL_BUDGET_C).reshape(W, P),
+            within_thermal_budget=(t_max < thermal_limit).reshape(W, P),
         )
 
     return EvalResult(grid=grid, **res)
@@ -581,6 +614,248 @@ def optimal_tiers_batched(
     best = np.argmin(cyc, axis=2)
     best_cycles = np.take_along_axis(cyc, best[:, :, None], axis=2)[:, :, 0]
     return best + 1, best_cycles
+
+
+# ---------------------------------------------------------------------------
+# Network-level scheduling (zoo -> lowering -> schedule -> report)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolicyResult:
+    """Network-level reduction of one mapping policy.
+
+    ``per_layer``: every layer runs on its own best feasible array
+    design (the DSE upper bound). ``fixed``: ONE array design (rows x
+    cols x tiers) serves every layer — the physically buildable case.
+    ``total_cycles`` is inf when no feasible design exists.
+    """
+
+    policy: str
+    total_cycles: float
+    time_s: float
+    energy_j: float
+    edp_js: float
+    total_cycles_2d: float
+    speedup_vs_2d: float
+    t_max_c: float
+    utilization: float
+    feasible: bool
+    #: per-layer: (n_gemms, 3) int array of (rows, cols, tiers) per
+    #: layer; fixed: the single (rows, cols, tiers) chosen.
+    design: np.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkReport:
+    """End-to-end evaluation of one lowered network stream."""
+
+    arch: str
+    shape: str
+    mode: str
+    n_gemms: int
+    n_gemm_invocations: int
+    total_macs: int
+    per_layer: PolicyResult
+    fixed: PolicyResult
+    #: candidate fixed designs considered / excluded purely by thermal
+    n_candidates: int
+    n_thermally_masked: int
+    thermal_limit: float
+
+    def to_dict(self) -> dict:
+        out = dataclasses.asdict(self)
+        for pol in ("per_layer", "fixed"):
+            out[pol]["design"] = np.asarray(out[pol]["design"]).tolist()
+        return out
+
+
+def _adaptive_chunk(workloads, mac_budgets) -> int:
+    """Bound the (chunk, r_max) search working set to ~2^23 elements.
+
+    Network streams carry token-sized dims (M up to tens of
+    thousands), so the default 2048-wide chunks would allocate
+    multi-GB tau intermediates. Results are chunk-independent."""
+    wl = np.atleast_2d(np.asarray(workloads, dtype=np.int64))
+    d1_max = int(wl.max())  # upper bound on D1 for any dataflow
+    r_max = min(d1_max, int(np.max(mac_budgets)))
+    return int(np.clip((1 << 23) // max(r_max, 1), 64, _DEFAULT_CHUNK))
+
+
+def thermal_feasible(
+    workloads,
+    mac_budgets,
+    tiers,
+    dataflow: str = "dos",
+    tech: str = "tsv",
+    thermal_limit: float = C.THERMAL_BUDGET_C,
+    backend: str = "numpy",
+) -> np.ndarray:
+    """(W, P) bool — can each (workload, design point) run within the
+    junction limit? The advisor uses this to strike 3D-stacked
+    candidates whose steady-state stack temperature overshoots."""
+    wl = np.atleast_2d(np.asarray(workloads, dtype=np.int64))
+    grid = DesignGrid(
+        workloads=wl, tiers=_as_1d_int(tiers), mac_budgets=_as_1d_int(mac_budgets),
+        dataflow=dataflow, tech=tech,
+    )
+    res = evaluate(
+        grid, backend=backend, metrics=("thermal",),
+        chunk=_adaptive_chunk(wl, grid.mac_budgets),
+        thermal_limit=thermal_limit,
+    )
+    return res.feasible
+
+
+def _reduce_policy(
+    policy, counts, cycles, energy, t_max, util_den, cycles_2d, design, freq_hz
+):
+    """Totals for one policy given the per-layer chosen columns."""
+    total_cycles = float(np.sum(counts * cycles))
+    time_s = total_cycles / freq_hz
+    energy_j = float(np.sum(counts * energy))
+    total_2d = float(np.sum(counts * cycles_2d))
+    with np.errstate(invalid="ignore", divide="ignore"):
+        speedup = total_2d / total_cycles if total_cycles > 0 else np.nan
+    feasible = bool(np.isfinite(total_cycles))
+    t_max = np.asarray(t_max, dtype=np.float64)
+    hot = float(np.nanmax(t_max)) if np.any(np.isfinite(t_max)) else float("nan")
+    return PolicyResult(
+        policy=policy,
+        total_cycles=total_cycles,
+        time_s=time_s,
+        energy_j=energy_j,
+        edp_js=energy_j * time_s,
+        total_cycles_2d=total_2d,
+        speedup_vs_2d=float(speedup),
+        t_max_c=hot,
+        utilization=float(util_den) if feasible else float("nan"),
+        feasible=feasible,
+        design=design,
+    )
+
+
+def schedule(
+    stream,
+    mac_budgets=(2**14, 2**16, 2**18),
+    tiers=tuple(range(1, 17)),
+    dataflow: str = "dos",
+    tech: str = "tsv",
+    backend: str = "numpy",
+    thermal_limit: float = C.THERMAL_BUDGET_C,
+    require_feasible: bool = True,
+    chunk: int | None = None,
+) -> NetworkReport:
+    """Evaluate a whole lowered network stream on the design grid.
+
+    ``stream`` is a ``core.network.WorkloadStream`` (anything with
+    ``.workloads`` (n, 3), ``.counts`` (n,) and the naming attributes
+    works). The engine evaluates the stream batched over the (budget x
+    tier) grid once, derives the candidate fixed-array designs from the
+    per-layer optima, re-evaluates those shared designs explicitly, and
+    reduces to network-level totals under two policies:
+
+    - ``per_layer``: each GEMM on its own best feasible design — the
+      DSE upper bound (what per-layer papers report).
+    - ``fixed``: one (rows x cols x tiers) array serves every layer —
+      the buildable accelerator. Its candidate set contains every
+      layer's optimum, so ``fixed.total_cycles >=
+      per_layer.total_cycles`` by construction.
+
+    Thermal feasibility is first-class: designs whose lumped stack
+    temperature reaches ``thermal_limit`` are excluded from both optima
+    (``require_feasible=False`` disables the mask, for ablations).
+    Speedups are against the budget-matched optimized 2D baseline of
+    the same dataflow family, reduced with the same per-layer counts.
+    """
+    wl = np.atleast_2d(np.asarray(stream.workloads, dtype=np.int64))
+    counts = np.asarray(stream.counts, dtype=np.float64)
+    W = wl.shape[0]
+    if counts.shape != (W,):
+        raise ValueError(f"counts shape {counts.shape} != ({W},)")
+    if chunk is None:
+        chunk = _adaptive_chunk(wl, mac_budgets)
+
+    # Pass 1: per-layer optimal shapes over the (budget x tier) grid —
+    # only the searched (rows, cols) feed the candidate set, so skip
+    # the PPA metric groups here; feasibility is applied in pass 2.
+    grid = DesignGrid.product(wl, mac_budgets, tiers, dataflow=dataflow, tech=tech)
+    res1 = evaluate(grid, backend=backend, metrics=("perf",), chunk=chunk)
+
+    # Candidate fixed designs: every distinct per-layer optimum. The
+    # per-layer policy minimizes over the same candidate columns, which
+    # is what makes fixed >= per_layer a theorem rather than a trend.
+    v = res1.valid
+    cand = np.unique(
+        np.stack(
+            [res1.rows[v], res1.cols[v], np.broadcast_to(grid.tiers, v.shape)[v]],
+            axis=1,
+        ),
+        axis=0,
+    )
+    if cand.shape[0] == 0:
+        raise ValueError(f"{stream.arch}/{stream.shape}: no valid design point")
+
+    # Pass 2: every layer on every shared candidate design (no search —
+    # explicit shapes), with power/thermal for the feasibility mask.
+    grid2 = DesignGrid.explicit(
+        wl, rows=cand[:, 0], cols=cand[:, 1], tiers=cand[:, 2],
+        dataflow=dataflow, tech=tech,
+    )
+    res2 = evaluate(grid2, backend=backend, chunk=chunk, thermal_limit=thermal_limit)
+    feas = res2.feasible if require_feasible else res2.valid
+    n_thermal_masked = int(np.sum(np.all(res2.valid, axis=0) & ~np.all(res2.feasible, axis=0)))
+
+    cyc = np.where(feas, res2.cycles, np.inf)
+    energy = np.where(feas, res2.energy_j, np.inf)
+    freq = C.FREQ_HZ
+    workload_macs = (wl[:, 0] * wl[:, 1] * wl[:, 2]).astype(np.float64)
+    n_macs_used = (cand[:, 0] * cand[:, 1] * cand[:, 2]).astype(np.float64)
+
+    def util(chosen_cycles, chosen_cols):
+        # Useful MAC-ops per provisioned MAC-cycle over the whole run.
+        den = np.sum(counts * n_macs_used[chosen_cols] * chosen_cycles)
+        return np.sum(counts * workload_macs) / den if den > 0 else np.nan
+
+    # --- per-layer-optimal policy -------------------------------------
+    best = np.argmin(cyc, axis=1)  # (W,)
+    rows_w = np.arange(W)
+    pl_cyc = cyc[rows_w, best]
+    per_layer = _reduce_policy(
+        "per_layer", counts, pl_cyc,
+        energy[rows_w, best],
+        np.where(np.isfinite(pl_cyc), res2.t_max_c[rows_w, best], np.nan),
+        util(pl_cyc, best),
+        np.where(np.isfinite(pl_cyc), res2.cycles_2d[rows_w, best], np.inf),
+        cand[best], freq,
+    )
+
+    # --- fixed-design policy ------------------------------------------
+    # inf propagation: any infeasible layer poisons the whole column.
+    tot = np.sum(counts[:, None] * cyc, axis=0)
+    c_star = int(np.argmin(tot))
+    fx_cyc = cyc[:, c_star]
+    fixed = _reduce_policy(
+        "fixed", counts, fx_cyc,
+        energy[:, c_star],
+        np.where(np.isfinite(fx_cyc), res2.t_max_c[:, c_star], np.nan),
+        util(fx_cyc, np.full(W, c_star)),
+        np.where(np.isfinite(fx_cyc), res2.cycles_2d[:, c_star], np.inf),
+        cand[c_star], freq,
+    )
+
+    return NetworkReport(
+        arch=stream.arch,
+        shape=stream.shape,
+        mode=str(stream.mode),
+        n_gemms=W,
+        n_gemm_invocations=int(counts.sum()),
+        total_macs=int(np.sum(counts * workload_macs)),
+        per_layer=per_layer,
+        fixed=fixed,
+        n_candidates=int(cand.shape[0]),
+        n_thermally_masked=n_thermal_masked,
+        thermal_limit=thermal_limit,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -69,10 +69,16 @@ def solve_stack(q_w, cell_area_mm2, tiers: int, tech: str):
     a_cell_m2 = cell_area_mm2 * 1e-6
     g_ild = C.K_ILD_W_MK * a_cell_m2 / (C.T_ILD_UM * 1e-6)
     if tech == "tsv":
-        # TSV copper in parallel with the ILD (per-cell share of vias).
-        n_vias_cell = C.VLINK_BITS  # ~one MAC pile's worth per cell-column
+        # TSV copper in parallel with the ILD. Per-cell via share
+        # assumption: every thermal cell column carries the vertical
+        # partial-sum bus of ~one MAC pile (VLINK_BITS vias), and a
+        # quarter of each via's drawn area (A_TSV_UM2 includes the
+        # keep-out zone) is conductive copper core. The lumped model
+        # (lumped_tier_temps) charges the same share per MAC, so both
+        # models see consistent vertical conductance densities.
+        n_vias_cell = C.VLINK_BITS
         a_cu = n_vias_cell * (C.A_TSV_UM2 * 0.25) * 1e-12  # conductive core
-        g_via = C.K_CU_W_MK * a_cu / (C.T_TIER_SI_UM * 1e-6) * (q_w.shape[1] ** 0)
+        g_via = C.K_CU_W_MK * a_cu / (C.T_TIER_SI_UM * 1e-6)
         g_vert = g_ild + g_via
     else:
         g_vert = g_ild
@@ -159,6 +165,10 @@ def lumped_tier_temps(q_tiers_w, footprint_mm2, tiers, tech, macs_per_tier):
 
     a_m2 = footprint_mm2 * 1e-6
     g_ild = C.K_ILD_W_MK * a_m2 / (C.T_ILD_UM * 1e-6)
+    # Per-MAC TSV copper share: each MAC pile carries VLINK_BITS vias,
+    # of which a quarter of the drawn area (A_TSV_UM2 includes the
+    # keep-out zone) is conductive core — the same per-cell share
+    # solve_stack assumes, so grid and lumped vertical paths agree.
     a_cu = macs_per_tier * C.VLINK_BITS * (C.A_TSV_UM2 * 0.25) * 1e-12
     g_via = C.K_CU_W_MK * a_cu / (C.T_TIER_SI_UM * 1e-6)
     g_vert = np.where(tech == "tsv", g_ild + g_via, g_ild)

@@ -8,10 +8,16 @@ flow through a ``shard_map`` loop of ``n_mb + n_stages - 1`` ticks with
 jax.grad differentiates straight through it (ppermute's transpose is
 the reverse permute, giving the backward pipeline for free).
 
-Embedding runs on stage 0, the LM head + loss on the last stage; the
-scalar loss is broadcast with a psum. Bubble fraction is
-(n_stages - 1) / (n_mb + n_stages - 1) — the §Perf log reasons about
-it explicitly.
+Embedding runs on stage 0, the LM head + loss on the last stage. The
+loop is written version-agnostically so it runs on jax 0.4 and >= 0.7
+alike: every value carried through the shard_map body has rank >= 1
+(jax 0.4's linearization names shard_map residuals ``{0: axes}``,
+which a rank-0 carry cannot satisfy, breaking the backward pass), and
+the loss leaves the body as a per-stage ``P(stage_axis)`` output
+summed *outside* — only the last stage contributes a nonzero partial,
+so no in-body psum/broadcast collective is needed at all. Bubble
+fraction is (n_stages - 1) / (n_mb + n_stages - 1) — the §Perf log
+reasons about it explicitly.
 
 This path implements the dense family (llama/qwen/gemma-style blocks);
 it exists to prove the schedule and to give the dry-run a pipelined
@@ -94,7 +100,8 @@ def make_gpipe_loss(cfg, mesh, *, n_stages: int, n_microbatches: int,
                 P(None, None, None),  # tokens_mb
                 P(None, None, None),  # labels_mb
             ),
-            out_specs=P(),
+            # per-stage loss partials; only the last stage's is nonzero
+            out_specs=P(stage_axis),
         )
         def run(layers_s, wins_s, thetas_s, shared, toks, labs):
             my = jax.lax.axis_index(stage_axis)
@@ -105,6 +112,8 @@ def make_gpipe_loss(cfg, mesh, *, n_stages: int, n_microbatches: int,
             n_ticks = n_mb + n_stages - 1
             compute_dtype = jnp.dtype(cfg.compute_dtype)
             act0 = jnp.zeros((mb, s, cfg.d_model), compute_dtype)
+            # rank >= 1 keeps jax 0.4's residual naming representable
+            loss0 = jnp.zeros((1,), jnp.float32)
             fwd_perm = [(i, i + 1) for i in range(n_stages - 1)]
 
             def tick(carry, t):
@@ -124,25 +133,23 @@ def make_gpipe_loss(cfg, mesh, *, n_stages: int, n_microbatches: int,
                 is_last = my == n_stages - 1
                 loss_sum = loss_sum + jnp.where(
                     is_last & valid_out, mb_loss, 0.0
-                )
+                )[None]
                 # hand activations forward
                 act_next = jax.lax.ppermute(y, stage_axis, fwd_perm)
                 return (act_next, loss_sum), None
 
             # carries become stage-varying after my-dependent selects
             act0_v = _pcast(act0, (stage_axis,), to="varying")
-            loss0_v = _pcast(jnp.float32(0), (stage_axis,), to="varying")
+            loss0_v = _pcast(loss0, (stage_axis,), to="varying")
             (_, loss_sum), _ = jax.lax.scan(
                 tick, (act0_v, loss0_v), jnp.arange(n_ticks)
             )
-            # broadcast last stage's summed loss to all stages
-            total = jax.lax.psum(
-                jnp.where(my == n_stages - 1, loss_sum, 0.0), stage_axis
-            )
-            # average over the other mesh axes too (pure replication here)
-            return total / n_mb
+            return loss_sum
 
         shared = {"embed": params["embed"], "final_norm": params["final_norm"]}
-        return run(layers, wins, thetas, shared, tokens_mb, labels_mb)
+        partials = run(layers, wins, thetas, shared, tokens_mb, labels_mb)
+        # sum of per-stage partials == the last stage's loss; no
+        # collective needed (stages other than the last contribute 0)
+        return jnp.sum(partials) / n_mb
 
     return loss_fn
