@@ -6,8 +6,9 @@ ways:
 
   - legacy: the pre-engine per-point Python loop (scalar
     ``analytical.optimal_tiers`` per workload x budget), and
-  - engine: one ``core.engine.optimal_tiers_batched`` call (optionally
-    with the jitted JAX search backend).
+  - engine: one declarative Fig-7 Study (``core.dse.fig7_study``) whose
+    ``run()`` is a single ``optimal_tiers_batched`` engine call
+    (optionally with the jitted JAX search backend).
 
 Asserts both agree exactly, prints the speedup, and writes
 ``BENCH_dse.json`` next to this file.
@@ -25,7 +26,7 @@ import time
 import numpy as np
 
 from repro.core.analytical import optimal_tiers
-from repro.core.dse import random_workloads
+from repro.core.dse import fig7_study, random_workloads
 from repro.core.engine import optimal_tiers_batched
 
 HERE = pathlib.Path(__file__).resolve().parent
@@ -54,9 +55,11 @@ def run(n_workloads: int = 300, seed: int = 0, jax_backend: bool = False):
     for backend in backends:
         if backend == "jax":  # warm the jit cache outside the timed region
             optimal_tiers_batched(wl[:8], BUDGETS, MAX_TIERS, backend="jax")
+        study = fig7_study(BUDGETS, n_workloads, seed, MAX_TIERS, backend=backend)
         t0 = time.perf_counter()
-        best, _ = optimal_tiers_batched(wl, BUDGETS, MAX_TIERS, backend=backend)
+        res = study.run()
         dt = time.perf_counter() - t0
+        best = np.asarray(res.payload["optimal_tiers"], dtype=np.int64)
         assert np.array_equal(best, legacy), "engine disagrees with legacy loop"
         out[f"engine_{backend}_s"] = dt
         out[f"speedup_{backend}"] = legacy_s / dt

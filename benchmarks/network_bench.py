@@ -1,10 +1,12 @@
 """Benchmark the network-level mapping path (zoo -> lowering -> schedule).
 
 Lowers every live (arch, shape) cell of the model zoo to its GEMM
-stream and schedules it end-to-end through ``core.engine.schedule``,
-timing the lowering and the batched scheduling separately. Sanity
-checks ride along: every stream is non-empty, every report is finite,
-and the fixed-design policy is never faster than per-layer-optimal.
+stream and schedules it end-to-end — each cell is one declarative
+``schedule`` Study (``core.study``) compiled into
+``core.engine.schedule`` — timing the lowering and the scheduling
+separately. Sanity checks ride along: every stream is non-empty, every
+report is finite, and the fixed-design policy is never faster than
+per-layer-optimal.
 
 Writes ``BENCH_network.json`` next to this file.
 
@@ -22,8 +24,8 @@ import time
 
 import numpy as np
 
-from repro.core.engine import schedule
 from repro.core.network import lower_zoo
+from repro.core.study import AnalysisSpec, SpaceSpec, Study, WorkloadSpec
 
 HERE = pathlib.Path(__file__).resolve().parent
 
@@ -32,24 +34,38 @@ SMOKE_SHAPES = ("train_4k", "decode_32k")
 
 
 def run(smoke: bool = False, backend: str = "numpy"):
-    kw = {}
-    t0 = time.perf_counter()
+    from repro.configs import cells as zoo_cells
+
+    space = SpaceSpec()
+    archs = shapes = None
     if smoke:
-        streams = lower_zoo(shapes=set(SMOKE_SHAPES), archs=set(SMOKE_ARCHS))
-        kw = dict(mac_budgets=(2**14, 2**16), tiers=range(1, 9))
-    else:
-        streams = lower_zoo()
+        archs, shapes = set(SMOKE_ARCHS), set(SMOKE_SHAPES)
+        space = SpaceSpec(mac_budgets=(2**14, 2**16), tiers=tuple(range(1, 9)))
+    # lowering-only timing (the Study runs below re-lower their own
+    # cell as part of workload resolution; that cost — ~0.5 ms/cell vs
+    # ~0.7 s of scheduling — rides inside schedule_s)
+    t0 = time.perf_counter()
+    lower_zoo(shapes=shapes, archs=archs)
     lower_s = time.perf_counter() - t0
 
+    live, _ = zoo_cells()
     cells = []
     t0 = time.perf_counter()
-    for stream in streams:
-        rep = schedule(stream, backend=backend, **kw)
+    for arch, shape in live:
+        if archs is not None and arch not in archs:
+            continue
+        if shapes is not None and shape not in shapes:
+            continue
+        rep = Study(
+            workload=WorkloadSpec(kind="network", arch=arch, shape=shape),
+            space=space,
+            analysis=AnalysisSpec(kind="schedule", backend=backend),
+        ).run().report
         pl, fx = rep.per_layer, rep.fixed
-        assert stream.workloads.shape[0] > 0, (stream.arch, stream.shape)
+        assert rep.n_gemms > 0, (arch, shape)
         assert np.isfinite(pl.total_cycles) and np.isfinite(fx.total_cycles), (
-            stream.arch, stream.shape)
-        assert fx.total_cycles >= pl.total_cycles, (stream.arch, stream.shape)
+            arch, shape)
+        assert fx.total_cycles >= pl.total_cycles, (arch, shape)
         cells.append({
             "arch": rep.arch, "shape": rep.shape, "mode": rep.mode,
             "n_gemms": rep.n_gemms,

@@ -9,6 +9,7 @@ engine — each is a single ``DesignGrid`` evaluation.
 from __future__ import annotations
 
 import time
+import warnings
 
 import numpy as np
 
@@ -22,8 +23,12 @@ from repro.core.ppa import (
 
 def _timed(fn, reps=1):
     t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn()
+    # These benchmarks deliberately reproduce the figures through the
+    # historical call-style entry points (now Study-backed shims).
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for _ in range(reps):
+            out = fn()
     us = (time.perf_counter() - t0) / reps * 1e6
     return out, us
 

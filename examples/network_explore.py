@@ -2,7 +2,9 @@
 
 Lower any model-zoo architecture to its GEMM workload stream and
 schedule it end-to-end on the 3D-array design grid: per-layer-optimal
-vs one fixed array design, with thermal feasibility masking.
+vs one fixed array design, with thermal feasibility masking. Each run
+is a declarative ``core.study.Study`` — add ``--spec`` to print the
+spec JSON instead of running it (feed it to ``python -m repro run``).
 
 Run:  PYTHONPATH=src python examples/network_explore.py --arch qwen2.5-3b
       PYTHONPATH=src python examples/network_explore.py \\
@@ -15,8 +17,20 @@ off the feasible set.
 import argparse
 
 from repro.configs import REGISTRY, SHAPES
-from repro.core.engine import schedule
-from repro.core.network import lower_network
+from repro.core.study import AnalysisSpec, ConstraintSpec, SpaceSpec, Study, WorkloadSpec
+
+
+def build_study(arch, shape, dataflow, tech, thermal_limit):
+    kw = {}
+    if thermal_limit is not None:
+        kw["constraints"] = ConstraintSpec(thermal_limit_c=thermal_limit)
+    return Study(
+        name=f"network-explore-{arch}-{shape}",
+        workload=WorkloadSpec(kind="network", arch=arch, shape=shape),
+        space=SpaceSpec(dataflow=dataflow, tech=tech),
+        analysis=AnalysisSpec(kind="schedule"),
+        **kw,
+    )
 
 
 def main():
@@ -30,21 +44,24 @@ def main():
                     help="junction limit [C]; default: the 105C budget")
     ap.add_argument("--stream", action="store_true",
                     help="print the lowered GEMM stream per shape")
+    ap.add_argument("--spec", action="store_true",
+                    help="print the Study spec JSON instead of running")
     args = ap.parse_args()
 
     cfg = REGISTRY[args.arch]
     shapes = [args.shape] if args.shape else ["train_4k", "prefill_32k", "decode_32k"]
-    kw = dict(dataflow=args.dataflow, tech=args.tech)
-    if args.thermal_limit is not None:
-        kw["thermal_limit"] = args.thermal_limit
 
     for shape_name in shapes:
-        shape = SHAPES[shape_name]
         if shape_name == "long_500k" and not cfg.is_subquadratic:
             print(f"\n== {shape_name}: skipped (full attention at 500k)")
             continue
-        stream = lower_network(cfg, shape)
-        print(f"\n== {cfg.name} / {shape_name} ({shape.mode}) — "
+        study = build_study(args.arch, shape_name, args.dataflow, args.tech,
+                            args.thermal_limit)
+        if args.spec:
+            print(study.to_json())
+            continue
+        stream = study.workload.resolve()
+        print(f"\n== {cfg.name} / {shape_name} ({stream.mode}) — "
               f"{stream.workloads.shape[0]} unique GEMMs, "
               f"{stream.n_gemm_invocations} invocations, "
               f"{stream.total_macs:.3e} MACs")
@@ -52,7 +69,7 @@ def main():
             for g in stream.gemms:
                 print(f"   {g.name:16s} M={g.M:<7d} K={g.K:<7d} N={g.N:<7d} "
                       f"x{g.count}")
-        rep = schedule(stream, **kw)
+        rep = study.run().report
         for pol in (rep.per_layer, rep.fixed):
             if not pol.feasible:
                 print(f"   {pol.policy:9s}: NO feasible design under the "

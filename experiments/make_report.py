@@ -1,15 +1,16 @@
 """Generate the §Dry-run, §Roofline, §DSE and §Network sections.
 
-Usage: PYTHONPATH=src python experiments/make_report.py
+Usage: PYTHONPATH=src python -m repro report            (the front door)
+   or: PYTHONPATH=src python experiments/make_report.py [--sections ...]
 Writes experiments/dryrun_section.md, experiments/roofline_section.md
 (from the artifacts in experiments/dryrun/), experiments/
-dse_section.md (recomputed live through the batched evaluation engine:
-one ``DesignGrid`` call covering every Table-I workload x budget x tier
-with runtime, power, area and thermal columns, optima restricted to
-thermally feasible points) and experiments/network_section.md (the
-model zoo lowered to GEMM streams and scheduled end-to-end through
-``core.engine.schedule``, per-layer-optimal vs fixed-design policies).
-EXPERIMENTS.md includes their content verbatim.
+dse_section.md and experiments/network_section.md. The DSE and network
+tables are recomputed live through declarative ``core.study.Study``
+specs — one ``evaluate`` study covering every Table-I workload x
+budget x tier (optima restricted to thermally feasible points), and
+one ``schedule`` study per model-zoo cell (per-layer-optimal vs
+fixed-design policies). EXPERIMENTS.md includes their content
+verbatim.
 """
 
 from __future__ import annotations
@@ -113,19 +114,24 @@ def _note(a):
 
 
 def dse_section(mac_budgets=(2**14, 2**16, 2**18), max_tiers=16):
-    """Engine-backed DSE summary: per Table-I workload x MAC budget, the
+    """Study-backed DSE summary: per Table-I workload x MAC budget, the
     optimal tier count with its speedup, power, perf/area and T_max —
-    all from a single batched ``evaluate()`` over the full grid. Optima
-    are restricted to the thermally feasible points (``res.feasible``);
-    at the paper's scales nothing is masked (its Fig. 8 finding), but
-    the constraint is structural, not assumed."""
+    one declarative ``evaluate`` study over the full grid (a single
+    batched engine pass). Optima are restricted to the thermally
+    feasible points (``res.feasible``); at the paper's scales nothing
+    is masked (its Fig. 8 finding), but the constraint is structural,
+    not assumed."""
     from repro.core.dse import PAPER_WORKLOADS
-    from repro.core.engine import DesignGrid, evaluate
+    from repro.core.study import SpaceSpec, Study, WorkloadSpec
 
     names = list(PAPER_WORKLOADS)
     wl = [PAPER_WORKLOADS[n] for n in names]
-    grid = DesignGrid.product(wl, mac_budgets, range(1, max_tiers + 1))
-    res = evaluate(grid)
+    res = Study(
+        name="report-dse",
+        workload=WorkloadSpec(kind="gemms", gemms=wl),
+        space=SpaceSpec(mac_budgets=mac_budgets,
+                        tiers=tuple(range(1, max_tiers + 1))),
+    ).run().result
     W, B, T = len(wl), len(mac_budgets), max_tiers
     cyc = np.where(res.feasible, res.cycles, np.inf).reshape(W, B, T)
     best = np.argmin(cyc, axis=2)  # optimal feasible tier per (workload, budget)
@@ -159,11 +165,12 @@ def dse_section(mac_budgets=(2**14, 2**16, 2**18), max_tiers=16):
 
 
 def network_section(shapes=("train_4k", "prefill_32k", "decode_32k")):
-    """Network-level results: the model zoo lowered to GEMM streams and
-    scheduled through the engine — per-layer-optimal vs one fixed array
-    design, end-to-end cycles/energy/EDP and 3D-vs-2D speedup."""
-    from repro.core.engine import schedule
-    from repro.core.network import lower_zoo
+    """Network-level results: one declarative ``schedule`` study per
+    model-zoo cell — lowered to its GEMM stream and scheduled through
+    the engine, per-layer-optimal vs one fixed array design, end-to-end
+    cycles/energy/EDP and 3D-vs-2D speedup."""
+    from repro.configs import cells
+    from repro.core.study import AnalysisSpec, Study, WorkloadSpec
 
     lines = [
         "### Network-level schedule (zoo -> lowering -> engine.schedule)",
@@ -178,8 +185,15 @@ def network_section(shapes=("train_4k", "prefill_32k", "decode_32k")):
         "| fixed/opt | 3D-vs-2D | energy J | EDP Js | T_max C |",
         "|---|---|---|---|---|---|---|---|---|---|",
     ]
-    for stream in lower_zoo(shapes=set(shapes)):
-        rep = schedule(stream)
+    live, _ = cells()
+    for arch, shape in live:
+        if shape not in shapes:
+            continue
+        rep = Study(
+            name=f"report-network-{arch}-{shape}",
+            workload=WorkloadSpec(kind="network", arch=arch, shape=shape),
+            analysis=AnalysisSpec(kind="schedule"),
+        ).run().report
         fx, pl = rep.fixed, rep.per_layer
         r, c, l = (int(x) for x in np.asarray(fx.design).reshape(-1)[:3])
         lines.append(
@@ -192,12 +206,21 @@ def network_section(shapes=("train_4k", "prefill_32k", "decode_32k")):
     return "\n".join(lines) + "\n"
 
 
-def main():
-    arts = load()
-    (HERE / "dryrun_section.md").write_text(dryrun_section(arts))
-    (HERE / "roofline_section.md").write_text(roofline_section(arts))
-    (HERE / "dse_section.md").write_text(dse_section())
-    (HERE / "network_section.md").write_text(network_section())
+def main(sections=None):
+    """Regenerate the requested sections (None = all). This is what
+    ``python -m repro report`` drives."""
+    sections = set(sections) if sections else {"dryrun", "roofline", "dse", "network"}
+    arts = load() if sections & {"dryrun", "roofline"} else {}
+    if "dryrun" in sections:
+        (HERE / "dryrun_section.md").write_text(dryrun_section(arts))
+    if "roofline" in sections:
+        (HERE / "roofline_section.md").write_text(roofline_section(arts))
+    if "dse" in sections:
+        (HERE / "dse_section.md").write_text(dse_section())
+    if "network" in sections:
+        (HERE / "network_section.md").write_text(network_section())
+    if "roofline" not in sections:
+        return
     # machine-readable summary for the hillclimb
     rows = []
     for (arch, shape, mesh, strat), a in arts.items():
@@ -220,4 +243,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", nargs="*", default=None,
+                    choices=["dryrun", "roofline", "dse", "network"])
+    main(sections=ap.parse_args().sections)

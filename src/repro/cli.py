@@ -1,0 +1,146 @@
+"""``python -m repro`` — the shell front door over the DSE stack.
+
+Subcommands:
+
+- ``run <spec.json>``: load a declarative ``Study`` spec, compile it
+  through the batched engine, and write the versioned ``StudyResult``
+  artifact (JSON). ``-`` reads the spec from stdin.
+- ``example-spec <kind>``: print a small runnable template spec for any
+  analysis kind (evaluate | schedule | pareto | advise | sweep) —
+  ``python -m repro example-spec evaluate > spec.json`` then ``run`` it.
+- ``report``: regenerate the ``experiments/`` report sections (the DSE
+  and network tables are recomputed live through Study specs).
+- ``bench``: run the repo benchmarks (``--smoke`` for the CI subset);
+  each emits its ``BENCH_*.json`` next to ``benchmarks/``.
+
+``report`` and ``bench`` drive files that live in the repository
+checkout (``experiments/``, ``benchmarks/``), so they locate the repo
+root from the current directory; ``run``/``example-spec`` work
+anywhere the package is importable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+from .core.study import ANALYSIS_KINDS, Study
+
+_BENCHES = ("dse", "network", "study")
+
+
+def _find_repo_root() -> pathlib.Path:
+    """Walk up from cwd to the checkout holding benchmarks/experiments."""
+    here = pathlib.Path.cwd().resolve()
+    for cand in (here, *here.parents):
+        if (cand / "benchmarks").is_dir() and (cand / "experiments").is_dir():
+            return cand
+    raise SystemExit(
+        "error: could not find the repo checkout (benchmarks/ + experiments/) "
+        "from the current directory — run from inside the repository"
+    )
+
+
+def _cmd_run(args) -> int:
+    if args.spec == "-":
+        text = sys.stdin.read()
+        src = "<stdin>"
+    else:
+        path = pathlib.Path(args.spec)
+        if not path.exists():
+            raise SystemExit(f"error: spec file {path} does not exist")
+        text = path.read_text()
+        src = str(path)
+    try:
+        study = Study.from_json(text)
+    except (ValueError, KeyError, TypeError, json.JSONDecodeError) as e:
+        # TypeError covers misspelled spec fields (unexpected kwargs)
+        raise SystemExit(f"error: invalid study spec {src}: {e}") from None
+    result = study.run()
+    if args.out:
+        out = result.save(args.out)
+        print(f"wrote {out}")
+    else:
+        print(result.to_json())
+    print(result.describe(), file=sys.stderr)
+    return 0
+
+
+def _cmd_example_spec(args) -> int:
+    print(Study.example(args.kind).to_json())
+    return 0
+
+
+def _cmd_report(args) -> int:
+    root = _find_repo_root()
+    path = root / "experiments" / "make_report.py"
+    spec = importlib.util.spec_from_file_location("repro_make_report", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.main(sections=args.sections)
+    return 0
+
+
+def _cmd_bench(args) -> int:
+    root = _find_repo_root()
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1])
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p
+    )
+    which = _BENCHES if args.which == "all" else (args.which,)
+    for name in which:
+        cmd = [sys.executable, "-m", f"benchmarks.{name}_bench"]
+        if args.smoke:
+            cmd.append("--smoke")
+        print(f"$ {' '.join(cmd)}", file=sys.stderr)
+        proc = subprocess.run(cmd, cwd=root, env=env)
+        if proc.returncode:
+            return proc.returncode
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Declarative Study front door over the 3D-IC DSE stack.",
+    )
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    run = sub.add_parser("run", help="run a Study spec, write the artifact")
+    run.add_argument("spec", help="path to a Study spec JSON ('-' for stdin)")
+    run.add_argument("--out", "-o", default=None,
+                     help="artifact path (default: print JSON to stdout)")
+    run.set_defaults(fn=_cmd_run)
+
+    ex = sub.add_parser("example-spec", help="print a runnable template spec")
+    ex.add_argument("kind", nargs="?", default="evaluate",
+                    choices=list(ANALYSIS_KINDS))
+    ex.set_defaults(fn=_cmd_example_spec)
+
+    rep = sub.add_parser("report", help="regenerate the experiments/ sections")
+    rep.add_argument("--sections", nargs="*", default=None,
+                     choices=["dryrun", "roofline", "dse", "network"],
+                     help="subset to regenerate (default: all)")
+    rep.set_defaults(fn=_cmd_report)
+
+    be = sub.add_parser("bench", help="run the repo benchmarks")
+    be.add_argument("--which", default="all", choices=["all", *_BENCHES])
+    be.add_argument("--smoke", action="store_true",
+                    help="small CI-sized runs (separate BENCH_*_smoke.json)")
+    be.set_defaults(fn=_cmd_bench)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

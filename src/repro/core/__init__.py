@@ -11,9 +11,14 @@
   batched entry points the engine consumes.
 - ``advisor``: the DSE generalized to TPU-mesh sharding choices, ranked
   through the engine.
+- ``study``: the declarative front door — JSON-round-trippable
+  ``Study`` specs compiled into the engine, returning versioned
+  ``StudyResult`` artifacts (what ``python -m repro`` drives).
+- ``params``: the shared option vocabularies + validators every API
+  boundary uses.
 """
 
-from . import advisor, analytical, dataflow, dse, engine, ppa, systolic
+from . import advisor, analytical, dataflow, dse, engine, params, ppa, study, systolic
 from .analytical import (
     GEMM,
     ArrayPlan,
@@ -37,6 +42,14 @@ from .engine import (
     optimal_tiers_batched,
     pareto_frontier,
 )
+from .study import (
+    AnalysisSpec,
+    ConstraintSpec,
+    SpaceSpec,
+    Study,
+    StudyResult,
+    WorkloadSpec,
+)
 from .systolic import simulate_dos_3d, simulate_os_2d
 
 __all__ = [
@@ -45,8 +58,16 @@ __all__ = [
     "dataflow",
     "dse",
     "engine",
+    "params",
     "ppa",
+    "study",
     "systolic",
+    "AnalysisSpec",
+    "ConstraintSpec",
+    "SpaceSpec",
+    "Study",
+    "StudyResult",
+    "WorkloadSpec",
     "GEMM",
     "ArrayPlan",
     "mac_threshold",

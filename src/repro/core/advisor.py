@@ -108,7 +108,7 @@ def score_strategies(
     ]
 
 
-def rank_candidates(
+def _rank(
     workloads,
     axis,
     mac_budget: int | None = None,
@@ -116,8 +116,9 @@ def rank_candidates(
     thermal_limit: float | None = None,
     **kw,
 ):
-    """Rank all four mesh strategies for a whole batch of GEMMs in one
-    engine call.
+    """The ranking engine behind ``rank_candidates`` and the Study
+    ``'advise'`` analysis — both route through this one implementation,
+    so the shim and the spec path can never drift.
 
     ``workloads`` is an (n, 3) array-like of (M, K, N) rows; ``axis`` is
     the mesh-axis size (scalar or (n,)). Returns ``(names, totals)``:
@@ -151,6 +152,57 @@ def rank_candidates(
         totals[~feas, MESH_STRATEGIES.index("shard_K")] = np.inf
     names = np.asarray(MESH_STRATEGIES)[np.argmin(totals, axis=1)]
     return names, totals
+
+
+def rank_candidates(
+    workloads,
+    axis,
+    mac_budget: int | None = None,
+    tech: str = "tsv",
+    thermal_limit: float | None = None,
+    **kw,
+):
+    """DEPRECATED shim: rank all four mesh strategies for a batch of
+    GEMMs. Build the declarative equivalent instead —
+
+        Study(workload=WorkloadSpec(kind='gemms', gemms=...),
+              space=SpaceSpec(tech=...),
+              constraints=ConstraintSpec(thermal_limit_c=...),
+              analysis=AnalysisSpec(kind='advise', axis=..., mac_budget=...))
+
+    — whose ``run()`` payload carries the same ``names``/``totals``
+    (see ``_rank`` for semantics; both paths share it bit-for-bit).
+    """
+    import warnings
+
+    from .ppa import constants as _C
+    from .study import AnalysisSpec, ConstraintSpec, SpaceSpec, Study, WorkloadSpec
+
+    warnings.warn(
+        "rank_candidates(...) is deprecated; use a core.study.Study with "
+        "AnalysisSpec(kind='advise') — same engine, same bits, plus a "
+        "serializable StudyResult artifact.",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    wl = np.atleast_2d(np.asarray(workloads, dtype=np.int64))
+    axis_arr = np.atleast_1d(np.asarray(axis))
+    if axis_arr.shape[0] != 1:
+        # per-workload axis sizes never fit one scalar spec field; rank
+        # directly (identical implementation, no artifact).
+        return _rank(wl, axis, mac_budget=mac_budget, tech=tech,
+                     thermal_limit=thermal_limit, **kw)
+    res = Study(
+        workload=WorkloadSpec(kind="gemms", gemms=tuple(map(tuple, wl.tolist()))),
+        space=SpaceSpec(tech=tech),
+        constraints=ConstraintSpec(
+            thermal_limit_c=_C.THERMAL_BUDGET_C if thermal_limit is None
+            else thermal_limit
+        ),
+        analysis=AnalysisSpec(kind="advise", axis=int(axis_arr[0]),
+                              mac_budget=mac_budget, params=dict(kw)),
+    ).run()
+    return res.payload["names"], res.payload["totals"]
 
 
 def choose_sharding(g: GemmShard, **kw) -> Strategy:

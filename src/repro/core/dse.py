@@ -1,12 +1,16 @@
 """Design-space exploration sweeps (paper Figs. 5, 6, 7 and Sec. IV-A).
 
-These are the paper's workload/architecture studies. Each sweep is a
-thin wrapper over the batched evaluation engine (``core.engine``): it
-builds one ``DesignGrid`` spanning every (workload, MAC budget, tier)
-combination, makes a **single** ``evaluate()`` call, and reshapes the
-stacked result into the figure's layout — no per-point Python loops.
-Regression tests pin the outputs bit-for-bit to the original per-point
-loop implementations.
+These are the paper's workload/architecture studies, expressed as
+declarative ``Study`` specs (``core.study``): each ``fig*_study``
+builder returns the spec whose ``run()`` makes a **single** batched
+engine call over every (workload, MAC budget, tier) combination — no
+per-point Python loops. Regression tests pin the outputs bit-for-bit
+to the original per-point loop implementations.
+
+The classic call-style entry points (``fig5_sweep``/``fig6_sweep``/
+``fig7_scatter``) remain as thin shims over the same specs: they run
+the Study, reshape the payload into the historical return format, and
+emit a ``DeprecationWarning`` pointing at the spec equivalent.
 
 - Fig. 5: 3D-vs-2D speedup over tier count, for several MAC budgets and
   several K (M = 64, N = 147 fixed — ResNet50's RN0 M/N).
@@ -20,15 +24,19 @@ loop implementations.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from .analytical import mac_threshold
-from .engine import DesignGrid, evaluate, optimal_tiers_batched
+from .study import AnalysisSpec, SpaceSpec, Study, WorkloadSpec
 
 __all__ = [
+    "fig5_study",
     "fig5_sweep",
+    "fig6_study",
     "fig6_sweep",
+    "fig7_study",
     "fig7_scatter",
     "random_workloads",
     "PAPER_WORKLOADS",
@@ -47,6 +55,35 @@ PAPER_WORKLOADS = {
 }
 
 
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"{old} is deprecated; build the declarative equivalent with "
+        f"{new} (core.study) and call .run() — same engine, same bits, "
+        f"plus a serializable StudyResult artifact.",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def fig5_study(
+    mac_budgets=(2**12, 2**14, 2**16, 2**18),
+    ks=(255, 2560, 12100),
+    tiers=tuple(range(1, 17)),
+    M=64,
+    N=147,
+    mode="opt",
+    backend="numpy",
+) -> Study:
+    """The Fig.-5 sweep as a Study: speedup vs tier count for each
+    (MAC budget, K); payload ``speedup`` is (K, budget, tier)."""
+    return Study(
+        name="fig5",
+        workload=WorkloadSpec(kind="gemms", gemms=tuple((M, k, N) for k in ks)),
+        space=SpaceSpec(mac_budgets=mac_budgets, tiers=tiers, mode=mode),
+        analysis=AnalysisSpec(kind="sweep", figure="fig5", backend=backend),
+    )
+
+
 def fig5_sweep(
     mac_budgets=(2**12, 2**14, 2**16, 2**18),
     ks=(255, 2560, 12100),
@@ -56,17 +93,39 @@ def fig5_sweep(
     mode="opt",
     backend="numpy",
 ):
-    """Speedup vs tier count for each (MAC budget, K). Returns
-    {(n_macs, K): [speedup per tier count]} — one engine call."""
-    workloads = [(M, k, N) for k in ks]
-    grid = DesignGrid.product(workloads, mac_budgets, tiers, mode=mode)
-    res = evaluate(grid, backend=backend, metrics=("perf",))
-    s = res.speedup.reshape(len(ks), len(mac_budgets), len(tiers))
+    """DEPRECATED shim over ``fig5_study``. Returns the historical
+    ``(tiers, {(n_macs, K): [speedup per tier count]})`` format."""
+    _deprecated("fig5_sweep(...)", "fig5_study(...)")
+    res = fig5_study(mac_budgets, ks, tiers, M, N, mode, backend).run()
+    s = np.asarray(res.payload["speedup"])
     out = {}
     for bi, n in enumerate(mac_budgets):
         for ki, k in enumerate(ks):
             out[(n, k)] = [float(v) for v in s[ki, bi]]
     return tiers, out
+
+
+def fig6_study(
+    mac_budgets=tuple(2**p for p in range(10, 19)),
+    ns=(147, 1024),
+    ks=(784, 4096),
+    M=64,
+    tiers=4,
+    mode="opt",
+    backend="numpy",
+) -> Study:
+    """The Fig.-6 sweep as a Study: speedup vs MAC budget at a fixed
+    tier count; payload ``speedup`` is (N x K, budget, 1), workload
+    rows ordered N-major like the figure."""
+    return Study(
+        name="fig6",
+        workload=WorkloadSpec(
+            kind="gemms",
+            gemms=tuple((M, k, n_dim) for n_dim in ns for k in ks),
+        ),
+        space=SpaceSpec(mac_budgets=mac_budgets, tiers=(tiers,), mode=mode),
+        analysis=AnalysisSpec(kind="sweep", figure="fig6", backend=backend),
+    )
 
 
 def fig6_sweep(
@@ -78,13 +137,11 @@ def fig6_sweep(
     mode="opt",
     backend="numpy",
 ):
-    """Speedup vs MAC budget at fixed tier count. Returns
-    {(N, K): [speedup per budget]} plus the N_min threshold per N —
-    one engine call."""
-    workloads = [(M, k, n_dim) for n_dim in ns for k in ks]
-    grid = DesignGrid.product(workloads, mac_budgets, [tiers], mode=mode)
-    res = evaluate(grid, backend=backend, metrics=("perf",))
-    s = res.speedup.reshape(len(ns), len(ks), len(mac_budgets))
+    """DEPRECATED shim over ``fig6_study``. Returns the historical
+    ``(mac_budgets, {(N, K): [speedup per budget]}, {N: N_min})``."""
+    _deprecated("fig6_sweep(...)", "fig6_study(...)")
+    res = fig6_study(mac_budgets, ns, ks, M, tiers, mode, backend).run()
+    s = np.asarray(res.payload["speedup"]).reshape(len(ns), len(ks), len(mac_budgets))
     out = {}
     thresholds = {}
     for ni, n_dim in enumerate(ns):
@@ -112,6 +169,25 @@ def random_workloads(n: int = 300, seed: int = 0):
     return np.stack([M, K, N], axis=1)
 
 
+def fig7_study(
+    mac_budgets=(2**14, 2**16, 2**18),
+    n_workloads=300,
+    seed=0,
+    max_tiers=16,
+    mode="opt",
+    backend="numpy",
+) -> Study:
+    """The Fig.-7 scatter as a Study: optimal tier count per (random
+    workload, budget); payload ``optimal_tiers`` is (workload, budget)."""
+    return Study(
+        name="fig7",
+        workload=WorkloadSpec(kind="random", n=n_workloads, seed=seed),
+        space=SpaceSpec(mac_budgets=mac_budgets,
+                        tiers=tuple(range(1, max_tiers + 1)), mode=mode),
+        analysis=AnalysisSpec(kind="sweep", figure="fig7", backend=backend),
+    )
+
+
 def fig7_scatter(
     mac_budgets=(2**14, 2**16, 2**18),
     n_workloads=300,
@@ -120,17 +196,16 @@ def fig7_scatter(
     mode="opt",
     backend="numpy",
 ):
-    """Optimal tier count per workload x budget — one engine call over
-    the full (workloads x budgets x tiers) grid."""
-    wl = random_workloads(n_workloads, seed)
-    best, _ = optimal_tiers_batched(
-        wl, mac_budgets, max_tiers=max_tiers, mode=mode, backend=backend
-    )
+    """DEPRECATED shim over ``fig7_study``. Returns the historical
+    ``[Fig7Result per budget]`` list."""
+    _deprecated("fig7_scatter(...)", "fig7_study(...)")
+    res = fig7_study(mac_budgets, n_workloads, seed, max_tiers, mode, backend).run()
+    best = np.asarray(res.payload["optimal_tiers"], dtype=np.int64)
     return [
         Fig7Result(
             mac_budget=b,
-            optimal_tiers=best[:, bi].astype(np.int64),
-            median=float(np.median(best[:, bi])),
+            optimal_tiers=best[:, bi],
+            median=float(res.payload["medians"][bi]),
         )
         for bi, b in enumerate(mac_budgets)
     ]

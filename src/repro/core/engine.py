@@ -48,6 +48,15 @@ from .analytical import (
     dataflow_dims,
 )
 from .dataflow import activity_batched
+from .params import (
+    VALID_BACKENDS,
+    VALID_DATAFLOWS,
+    VALID_METRICS,
+    VALID_MODES,
+    VALID_TECHS,
+    validate_option,
+    validate_options,
+)
 from .ppa import constants as C
 from .ppa.area import array_area_um2_batched
 from .ppa.power import array_power_batched
@@ -100,6 +109,9 @@ class DesignGrid:
     mode: str = "opt"
 
     def __post_init__(self):
+        validate_options("dataflow", self.dataflow, VALID_DATAFLOWS)
+        validate_options("tech", self.tech, VALID_TECHS)
+        validate_option("mode", self.mode, VALID_MODES)
         wl = np.atleast_2d(np.asarray(self.workloads, dtype=np.int64))
         if wl.ndim != 2 or wl.shape[1] != 3:
             raise ValueError(f"workloads must be (W, 3) of (M, K, N), got {wl.shape}")
@@ -156,6 +168,30 @@ class DesignGrid:
         """Design points with fixed per-tier (rows, cols) — no search."""
         return cls(workloads=workloads, tiers=tiers, rows=rows, cols=cols, **kw)
 
+    def to_dict(self) -> dict:
+        """JSON-compatible form; ``from_dict`` is the exact inverse."""
+        out: dict = {"workloads": self.workloads.tolist()}
+        for name in ("tiers", "mac_budgets", "rows", "cols"):
+            v = getattr(self, name)
+            out[name] = None if v is None else np.asarray(v).tolist()
+        for name in ("dataflow", "tech"):
+            v = getattr(self, name)
+            out[name] = v if isinstance(v, str) else [str(x) for x in v]
+        out["mode"] = self.mode
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DesignGrid":
+        kw = {"workloads": d["workloads"], "tiers": d["tiers"], "mode": d.get("mode", "opt")}
+        for name in ("mac_budgets", "rows", "cols"):
+            if d.get(name) is not None:
+                kw[name] = d[name]
+        for name in ("dataflow", "tech"):
+            v = d.get(name)
+            if v is not None:
+                kw[name] = v if isinstance(v, str) else np.asarray(v)
+        return cls(**kw)
+
 
 @dataclasses.dataclass(frozen=True)
 class EvalResult:
@@ -204,9 +240,15 @@ class EvalResult:
             return self.valid
         return self.valid & self.within_thermal_budget
 
+    #: dtypes restored by ``from_dict`` (everything else is float64).
+    _INT_FIELDS = ("rows", "cols")
+    _BOOL_FIELDS = ("valid", "within_thermal_budget")
+
     def to_dict(self) -> dict:
-        """Array fields as a plain dict (None entries dropped)."""
-        out = {}
+        """Array fields as a plain dict (None entries dropped), plus the
+        originating grid under ``'grid'`` (already JSON-compatible).
+        ``from_dict`` completes this into a lossless round-trip."""
+        out = {"grid": self.grid.to_dict()}
         for f in dataclasses.fields(self):
             if f.name == "grid":
                 continue
@@ -214,6 +256,24 @@ class EvalResult:
             if v is not None:
                 out[f.name] = v
         return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "EvalResult":
+        """Inverse of ``to_dict``; accepts arrays or (JSON) nested lists
+        and restores the exact per-field dtypes."""
+        grid = d["grid"]
+        kw = {"grid": grid if isinstance(grid, DesignGrid) else DesignGrid.from_dict(grid)}
+        for f in dataclasses.fields(cls):
+            if f.name == "grid" or d.get(f.name) is None:
+                continue
+            if f.name in cls._INT_FIELDS:
+                dt = np.int64
+            elif f.name in cls._BOOL_FIELDS:
+                dt = bool
+            else:
+                dt = np.float64
+            kw[f.name] = np.asarray(d[f.name], dtype=dt)
+        return cls(**kw)
 
     def pareto_mask(
         self,
@@ -427,10 +487,8 @@ def evaluate(
     sets the junction temperature [C] behind
     ``within_thermal_budget`` / ``feasible``.
     """
-    metrics = set(metrics)
-    unknown = metrics - set(_ALL_METRICS)
-    if unknown:
-        raise ValueError(f"unknown metrics {sorted(unknown)}")
+    validate_option("backend", backend, VALID_BACKENDS)
+    metrics = {validate_option("metric", m, VALID_METRICS) for m in metrics}
     if "thermal" in metrics:
         metrics.add("power")
     if "power" in metrics:
@@ -644,6 +702,21 @@ class PolicyResult:
     #: layer; fixed: the single (rows, cols, tiers) chosen.
     design: np.ndarray
 
+    _FLOAT_FIELDS = (
+        "total_cycles", "time_s", "energy_j", "edp_js", "total_cycles_2d",
+        "speedup_vs_2d", "t_max_c", "utilization",
+    )
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PolicyResult":
+        kw = dict(d)
+        kw["design"] = np.asarray(d["design"], dtype=np.int64)
+        for name in cls._FLOAT_FIELDS:
+            # float() also decodes the strict-JSON "Infinity"/"NaN"
+            # encoding of non-finite values (see study._jsonify)
+            kw[name] = float(kw[name])
+        return cls(**kw)
+
 
 @dataclasses.dataclass(frozen=True)
 class NetworkReport:
@@ -667,6 +740,15 @@ class NetworkReport:
         for pol in ("per_layer", "fixed"):
             out[pol]["design"] = np.asarray(out[pol]["design"]).tolist()
         return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "NetworkReport":
+        """Inverse of ``to_dict`` (lossless up to JSON float text)."""
+        kw = dict(d)
+        for pol in ("per_layer", "fixed"):
+            v = d[pol]
+            kw[pol] = v if isinstance(v, PolicyResult) else PolicyResult.from_dict(v)
+        return cls(**kw)
 
 
 def _adaptive_chunk(workloads, mac_budgets) -> int:
@@ -767,6 +849,9 @@ def schedule(
     Speedups are against the budget-matched optimized 2D baseline of
     the same dataflow family, reduced with the same per-layer counts.
     """
+    validate_option("dataflow", dataflow, VALID_DATAFLOWS)
+    validate_option("tech", tech, VALID_TECHS)
+    validate_option("backend", backend, VALID_BACKENDS)
     wl = np.atleast_2d(np.asarray(stream.workloads, dtype=np.int64))
     counts = np.asarray(stream.counts, dtype=np.float64)
     W = wl.shape[0]

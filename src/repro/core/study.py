@@ -1,0 +1,825 @@
+"""One front door over the DSE stack: declarative, serializable studies.
+
+The paper's results (Figs. 5-8, Table I) are joint sweeps over
+workload x (MAC budget, tiers, dataflow, tech) under a thermal
+constraint. This module makes such a sweep a *first-class artifact*: a
+``Study`` is four small JSON-round-trippable specs —
+
+- ``WorkloadSpec``: what runs — a raw GEMM list, a model-zoo network
+  lowered via ``core.network.lower_network``, or the Fig.-7 random
+  workload generator (``core.dse.random_workloads``);
+- ``SpaceSpec``: the design space — MAC budgets x tiers (product or
+  parallel explicit points), optional fixed rows/cols, dataflow, tech;
+- ``ConstraintSpec``: thermal junction limit, optional area / power /
+  MAC-budget caps, and whether optima must be feasible;
+- ``AnalysisSpec``: which question to ask — ``evaluate`` | ``schedule``
+  | ``pareto`` | ``advise`` | ``sweep`` (the paper figures);
+
+— compiled by ``Study.run()`` into **one** pass through the existing
+batched engine (``core.engine``) and returned as a versioned
+``StudyResult`` that echoes the inputs and serializes to JSON
+(``save``/``load``/``to_json``/``from_json``). The legacy entry points
+(``dse.fig5_sweep``/``fig6_sweep``/``fig7_scatter``,
+``advisor.rank_candidates``, the report generator, the examples and
+benchmarks) are thin wrappers over these specs, and ``python -m repro``
+exposes the same studies from the shell:
+
+    PYTHONPATH=src python -m repro example-spec evaluate > spec.json
+    PYTHONPATH=src python -m repro run spec.json --out artifact.json
+
+In-memory, ``StudyResult.payload`` keeps the engine's typed objects
+(``EvalResult`` / ``NetworkReport`` / numpy arrays) so the facade adds
+no conversion cost over a direct engine call; JSON conversion happens
+only in ``to_dict``/``to_json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+
+import numpy as np
+
+from .engine import (
+    MESH_STRATEGIES,
+    DesignGrid,
+    EvalResult,
+    NetworkReport,
+    _adaptive_chunk,
+    evaluate,
+    optimal_tiers_batched,
+    schedule,
+)
+from .params import (
+    VALID_BACKENDS,
+    VALID_DATAFLOWS,
+    VALID_METRICS,
+    VALID_MODES,
+    VALID_OBJECTIVES,
+    VALID_TECHS,
+    validate_option,
+    validate_options,
+)
+from .ppa import constants as C
+
+__all__ = [
+    "ANALYSIS_KINDS",
+    "SPEC_VERSION",
+    "SWEEP_FIGURES",
+    "WORKLOAD_KINDS",
+    "AnalysisSpec",
+    "ConstraintSpec",
+    "SpaceSpec",
+    "Study",
+    "StudyResult",
+    "WorkloadSpec",
+]
+
+#: bumped whenever the spec/artifact schema changes incompatibly.
+SPEC_VERSION = 1
+
+WORKLOAD_KINDS = ("gemms", "network", "random")
+ANALYSIS_KINDS = ("evaluate", "schedule", "pareto", "advise", "sweep")
+SWEEP_FIGURES = ("fig5", "fig6", "fig7")
+
+
+# ---------------------------------------------------------------------------
+# Normalization / JSON helpers
+# ---------------------------------------------------------------------------
+
+def _int_tuple(name: str, v) -> tuple[int, ...] | None:
+    if v is None:
+        return None
+    try:
+        return tuple(int(x) for x in np.atleast_1d(np.asarray(v)).tolist())
+    except (TypeError, ValueError):
+        raise ValueError(f"{name} must be an int sequence, got {v!r}") from None
+
+
+def _str_or_tuple(v):
+    return v if isinstance(v, str) else tuple(str(x) for x in v)
+
+
+def _jsonify(v):
+    """Engine objects / numpy -> JSON-compatible plain Python.
+
+    Non-finite floats become the strings ``"Infinity"`` / ``"-Infinity"``
+    / ``"NaN"`` so artifacts are *strict* JSON (parseable by jq /
+    JavaScript, not just Python); ``float(...)`` and
+    ``np.asarray(..., dtype=float)`` on the decode paths restore them
+    exactly. ``to_json`` serializes with ``allow_nan=False`` so a raw
+    token can never slip through.
+    """
+    if isinstance(v, (EvalResult, NetworkReport, DesignGrid)):
+        return _jsonify(v.to_dict())
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return _jsonify(dataclasses.asdict(v))
+    if isinstance(v, dict):
+        return {str(k): _jsonify(x) for k, x in v.items()}
+    if isinstance(v, np.ndarray):
+        if np.issubdtype(v.dtype, np.floating) and not np.isfinite(v).all():
+            return _jsonify(v.tolist())
+        return v.tolist()
+    if isinstance(v, (list, tuple)):
+        return [_jsonify(x) for x in v]
+    if isinstance(v, np.generic):
+        return _jsonify(v.item())
+    if isinstance(v, float) and not math.isfinite(v):
+        return "NaN" if math.isnan(v) else ("Infinity" if v > 0 else "-Infinity")
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Spec layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ResolvedWorkload:
+    """The stream-shaped object every analysis consumes (duck-typed to
+    ``core.network.WorkloadStream`` for ``engine.schedule``)."""
+
+    workloads: np.ndarray
+    counts: np.ndarray
+    arch: str
+    shape: str
+    mode: str = "gemm"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """What runs. ``kind``:
+
+    - ``'gemms'``: explicit ``gemms`` = ((M, K, N), ...) rows with
+      optional per-row ``counts`` (multiplicities for ``schedule``);
+    - ``'network'``: the model-zoo config ``arch`` lowered for shape
+      ``shape`` via ``core.network.lower_network``;
+    - ``'random'``: ``n`` Fig.-7-style random workloads from
+      ``core.dse.random_workloads(n, seed)``.
+    """
+
+    kind: str = "gemms"
+    gemms: tuple[tuple[int, int, int], ...] = ()
+    counts: tuple[int, ...] | None = None
+    arch: str | None = None
+    shape: str | None = None
+    n: int = 300
+    seed: int = 0
+
+    def __post_init__(self):
+        validate_option("workload kind", self.kind, WORKLOAD_KINDS)
+        gemms = ()
+        if len(self.gemms):
+            arr = np.atleast_2d(np.asarray(self.gemms, dtype=np.int64))
+            if arr.ndim != 2 or arr.shape[1] != 3:
+                raise ValueError(
+                    f"gemms must be (M, K, N) rows, got shape {arr.shape}"
+                )
+            gemms = tuple(tuple(int(x) for x in row) for row in arr.tolist())
+        object.__setattr__(self, "gemms", gemms)
+        object.__setattr__(self, "counts", _int_tuple("counts", self.counts))
+        object.__setattr__(self, "n", int(self.n))
+        object.__setattr__(self, "seed", int(self.seed))
+        if self.kind == "gemms":
+            if not self.gemms:
+                raise ValueError("kind='gemms' needs gemms = ((M, K, N), ...) rows")
+            if self.counts is not None and len(self.counts) != len(self.gemms):
+                raise ValueError(
+                    f"counts length {len(self.counts)} != {len(self.gemms)} gemms"
+                )
+        elif self.kind == "network":
+            from ..configs import REGISTRY, SHAPES  # deferred: registry import
+
+            validate_option("arch", self.arch, tuple(sorted(REGISTRY)))
+            validate_option("shape", self.shape, tuple(sorted(SHAPES)))
+        elif self.n < 1:
+            raise ValueError(f"kind='random' needs n >= 1, got {self.n}")
+
+    def resolve(self):
+        """-> a stream (``workloads``/``counts``/naming attributes)."""
+        if self.kind == "network":
+            from ..configs import REGISTRY, SHAPES
+            from .network import lower_network
+
+            return lower_network(REGISTRY[self.arch], SHAPES[self.shape])
+        if self.kind == "random":
+            from .dse import random_workloads
+
+            wl = random_workloads(self.n, self.seed)
+            return _ResolvedWorkload(
+                workloads=wl,
+                counts=np.ones(wl.shape[0], dtype=np.int64),
+                arch=f"random-{self.n}",
+                shape=f"seed-{self.seed}",
+            )
+        wl = np.asarray(self.gemms, dtype=np.int64)
+        counts = (
+            np.asarray(self.counts, dtype=np.int64)
+            if self.counts is not None
+            else np.ones(wl.shape[0], dtype=np.int64)
+        )
+        return _ResolvedWorkload(
+            workloads=wl, counts=counts, arch="gemms", shape=f"{wl.shape[0]}x3"
+        )
+
+    def to_dict(self) -> dict:
+        return _jsonify(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "WorkloadSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceSpec:
+    """The design space. ``layout='product'`` crosses ``mac_budgets`` x
+    ``tiers`` (budget-major, like ``DesignGrid.product``);
+    ``layout='explicit'`` zips the per-point arrays in parallel. Fixed
+    per-tier shapes (``rows``/``cols``) skip the (R, C) search."""
+
+    mac_budgets: tuple[int, ...] | None = (2**14, 2**16, 2**18)
+    tiers: tuple[int, ...] = tuple(range(1, 17))
+    rows: tuple[int, ...] | None = None
+    cols: tuple[int, ...] | None = None
+    dataflow: str | tuple[str, ...] = "dos"
+    tech: str | tuple[str, ...] = "tsv"
+    mode: str = "opt"
+    layout: str = "product"
+
+    def __post_init__(self):
+        for name in ("mac_budgets", "tiers", "rows", "cols"):
+            object.__setattr__(self, name, _int_tuple(name, getattr(self, name)))
+        for name in ("dataflow", "tech"):
+            object.__setattr__(self, name, _str_or_tuple(getattr(self, name)))
+        validate_options("dataflow", self.dataflow, VALID_DATAFLOWS)
+        validate_options("tech", self.tech, VALID_TECHS)
+        validate_option("mode", self.mode, VALID_MODES)
+        validate_option("layout", self.layout, ("product", "explicit"))
+        if (self.rows is None) != (self.cols is None):
+            raise ValueError("rows and cols must be given together")
+        if self.rows is None and self.mac_budgets is None:
+            raise ValueError("need either mac_budgets or explicit rows+cols")
+
+    def _df_tech(self) -> dict:
+        return {
+            name: (v if isinstance(v, str) else np.asarray(v))
+            for name, v in (("dataflow", self.dataflow), ("tech", self.tech))
+        }
+
+    def to_grid(self, workloads) -> DesignGrid:
+        kw = dict(self._df_tech(), mode=self.mode)
+        if self.rows is not None:
+            return DesignGrid.explicit(
+                workloads, rows=self.rows, cols=self.cols, tiers=self.tiers, **kw
+            )
+        if self.layout == "product":
+            return DesignGrid.product(
+                workloads, mac_budgets=self.mac_budgets, tiers=self.tiers, **kw
+            )
+        return DesignGrid(
+            workloads=workloads, tiers=self.tiers, mac_budgets=self.mac_budgets, **kw
+        )
+
+    def to_dict(self) -> dict:
+        return _jsonify(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SpaceSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstraintSpec:
+    """Feasibility constraints. The thermal limit feeds the engine's
+    first-class mask; the optional caps additionally strike design
+    points whose provisioned MAC budget / silicon area / average power
+    overshoot (reported as ``constraint_mask`` in the payload).
+    ``require_feasible=False`` lets optima/frontiers ignore the mask
+    (ablations)."""
+
+    thermal_limit_c: float = C.THERMAL_BUDGET_C
+    max_mac_budget: int | None = None
+    max_area_um2: float | None = None
+    max_power_w: float | None = None
+    require_feasible: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "thermal_limit_c", float(self.thermal_limit_c))
+        if self.max_mac_budget is not None:
+            object.__setattr__(self, "max_mac_budget", int(self.max_mac_budget))
+        for name in ("max_area_um2", "max_power_w"):
+            v = getattr(self, name)
+            if v is not None:
+                object.__setattr__(self, name, float(v))
+        object.__setattr__(self, "require_feasible", bool(self.require_feasible))
+
+    @property
+    def has_caps(self) -> bool:
+        return any(
+            v is not None
+            for v in (self.max_mac_budget, self.max_area_um2, self.max_power_w)
+        )
+
+    def mask(self, res: EvalResult) -> np.ndarray:
+        """(W, P) bool: engine feasibility AND every requested cap."""
+        m = res.feasible
+        grid = res.grid
+        if self.max_mac_budget is not None:
+            b = (
+                grid.mac_budgets
+                if grid.mac_budgets is not None
+                else grid.rows * grid.cols * grid.tiers
+            )
+            m = m & (b <= self.max_mac_budget)[None, :]
+        for cap, metric in (
+            (self.max_area_um2, "area_um2"),
+            (self.max_power_w, "power_w"),
+        ):
+            if cap is None:
+                continue
+            v = getattr(res, metric)
+            if v is None:
+                raise ValueError(
+                    f"constraint on {metric} needs that metric evaluated "
+                    f"(add the matching group to AnalysisSpec.metrics)"
+                )
+            with np.errstate(invalid="ignore"):
+                m = m & (np.nan_to_num(v, nan=np.inf) <= cap)
+        return m
+
+    def to_dict(self) -> dict:
+        return _jsonify(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ConstraintSpec":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisSpec:
+    """Which question the study asks.
+
+    - ``'evaluate'``: every (workload, design point) metric group in
+      ``metrics`` (one batched ``engine.evaluate``).
+    - ``'pareto'``: evaluate + the per-workload Pareto frontier over
+      ``objectives`` (minimized), feasibility-restricted.
+    - ``'schedule'``: the workload as ONE network stream through
+      ``engine.schedule`` (per-layer-optimal vs fixed-design policies).
+    - ``'advise'``: the TPU-mesh advisor — rank the four sharding
+      strategies for every GEMM on a mesh axis of size ``axis``; with
+      ``mac_budget`` set, ``shard_K`` (the 3D-stacked dOS mapping) is
+      thermally struck when infeasible. Extra roofline knobs go in
+      ``params``.
+    - ``'sweep'``: a paper figure (``figure`` in fig5|fig6|fig7) over
+      the study's space.
+
+    ``chunk=None`` uses the engine default, except for network
+    workloads where the adaptive bound kicks in (token-sized M dims).
+    """
+
+    kind: str = "evaluate"
+    metrics: tuple[str, ...] = ("perf", "area", "power", "thermal")
+    backend: str = "numpy"
+    chunk: int | None = None
+    objectives: tuple[str, ...] = ("cycles", "area_um2", "power_w")
+    axis: int = 16
+    mac_budget: int | None = None
+    figure: str | None = None
+    params: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        validate_option("analysis kind", self.kind, ANALYSIS_KINDS)
+        validate_option("backend", self.backend, VALID_BACKENDS)
+        object.__setattr__(
+            self, "metrics", tuple(validate_option("metric", m, VALID_METRICS)
+                                   for m in self.metrics)
+        )
+        object.__setattr__(
+            self, "objectives",
+            tuple(validate_option("objective", o, VALID_OBJECTIVES)
+                  for o in self.objectives),
+        )
+        object.__setattr__(self, "axis", int(self.axis))
+        if self.chunk is not None:
+            object.__setattr__(self, "chunk", int(self.chunk))
+        if self.mac_budget is not None:
+            object.__setattr__(self, "mac_budget", int(self.mac_budget))
+        if self.kind == "sweep":
+            validate_option("sweep figure", self.figure, SWEEP_FIGURES)
+        if not isinstance(self.params, dict):
+            raise ValueError(f"params must be a dict, got {type(self.params).__name__}")
+
+    def to_dict(self) -> dict:
+        return _jsonify(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "AnalysisSpec":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# The study itself
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Study:
+    """A declarative, reproducible DSE study (the one front door).
+
+    ``run()`` compiles the four specs into the batched engine and
+    returns a ``StudyResult``. The whole object round-trips through
+    JSON, so a study can be checked in, re-run, and diffed.
+    """
+
+    workload: WorkloadSpec
+    space: SpaceSpec = dataclasses.field(default_factory=SpaceSpec)
+    constraints: ConstraintSpec = dataclasses.field(default_factory=ConstraintSpec)
+    analysis: AnalysisSpec = dataclasses.field(default_factory=AnalysisSpec)
+    name: str = ""
+
+    def __post_init__(self):
+        for name, typ in (
+            ("workload", WorkloadSpec),
+            ("space", SpaceSpec),
+            ("constraints", ConstraintSpec),
+            ("analysis", AnalysisSpec),
+        ):
+            v = getattr(self, name)
+            if isinstance(v, dict):
+                object.__setattr__(self, name, typ.from_dict(v))
+            elif not isinstance(v, typ):
+                raise ValueError(f"{name} must be a {typ.__name__} (or dict)")
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "version": SPEC_VERSION,
+            "name": self.name,
+            "workload": self.workload.to_dict(),
+            "space": self.space.to_dict(),
+            "constraints": self.constraints.to_dict(),
+            "analysis": self.analysis.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Study":
+        version = int(d.get("version", SPEC_VERSION))
+        if version > SPEC_VERSION:
+            raise ValueError(
+                f"spec version {version} is newer than supported {SPEC_VERSION}"
+            )
+        if "workload" not in d:
+            raise ValueError("a study spec needs at least a 'workload' section")
+        kw = {"workload": WorkloadSpec.from_dict(d["workload"]),
+              "name": str(d.get("name", ""))}
+        for name, typ in (
+            ("space", SpaceSpec),
+            ("constraints", ConstraintSpec),
+            ("analysis", AnalysisSpec),
+        ):
+            if d.get(name) is not None:
+                kw[name] = typ.from_dict(d[name])
+        return cls(**kw)
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, allow_nan=False)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Study":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.write_text(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path) -> "Study":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self) -> "StudyResult":
+        stream = self.workload.resolve()
+        runner = getattr(self, f"_run_{self.analysis.kind}")
+        payload = runner(stream)
+        return StudyResult(study=self, kind=self.analysis.kind, payload=payload)
+
+    def _chunk_for(self, workloads) -> int | None:
+        a = self.analysis
+        if a.chunk is not None:
+            return a.chunk
+        if self.workload.kind == "network" and self.space.mac_budgets is not None:
+            # token-sized M dims: bound the search working set like
+            # engine.schedule does (results are chunk-independent).
+            return _adaptive_chunk(workloads, self.space.mac_budgets)
+        return None
+
+    def _evaluate(self, stream, metrics=None) -> EvalResult:
+        grid = self.space.to_grid(stream.workloads)
+        kw = {}
+        chunk = self._chunk_for(stream.workloads)
+        if chunk is not None:
+            kw["chunk"] = chunk
+        return evaluate(
+            grid,
+            backend=self.analysis.backend,
+            metrics=self.analysis.metrics if metrics is None else metrics,
+            thermal_limit=self.constraints.thermal_limit_c,
+            **kw,
+        )
+
+    def _run_evaluate(self, stream) -> dict:
+        res = self._evaluate(stream)
+        mask = self.constraints.mask(res)
+        return {
+            "result": res,
+            "constraint_mask": mask,
+            "n_valid": int(res.valid.sum()),
+            "n_feasible": int(mask.sum()),
+        }
+
+    def _run_pareto(self, stream) -> dict:
+        payload = self._run_evaluate(stream)
+        res, mask = payload["result"], payload["constraint_mask"]
+        res_f = (
+            dataclasses.replace(res, within_thermal_budget=mask)
+            if self.constraints.has_caps
+            else res
+        )
+        payload["pareto_mask"] = res_f.pareto_mask(
+            self.analysis.objectives,
+            feasible_only=self.constraints.require_feasible,
+        )
+        payload["objectives"] = list(self.analysis.objectives)
+        return payload
+
+    def _run_schedule(self, stream) -> dict:
+        if self.space.rows is not None:
+            raise ValueError("schedule searches array shapes; drop rows/cols")
+        if self.constraints.has_caps:
+            raise ValueError(
+                "schedule supports the thermal constraint only; drop the caps"
+            )
+        for name in ("dataflow", "tech"):
+            if not isinstance(getattr(self.space, name), str):
+                raise ValueError(f"schedule needs a single {name}, not a per-point array")
+        kw = {}
+        if self.analysis.chunk is not None:
+            kw["chunk"] = self.analysis.chunk
+        rep = schedule(
+            stream,
+            mac_budgets=self.space.mac_budgets,
+            tiers=self.space.tiers,
+            dataflow=self.space.dataflow,
+            tech=self.space.tech,
+            backend=self.analysis.backend,
+            thermal_limit=self.constraints.thermal_limit_c,
+            require_feasible=self.constraints.require_feasible,
+            **kw,
+        )
+        return {"report": rep}
+
+    def _run_advise(self, stream) -> dict:
+        from .advisor import _rank  # deferred: advisor's shim imports Study
+
+        if self.constraints.has_caps:
+            raise ValueError(
+                "advise supports the thermal constraint only; drop the caps"
+            )
+        if not isinstance(self.space.tech, str):
+            raise ValueError("advise needs a single tech, not a per-point array")
+        names, totals = _rank(
+            stream.workloads,
+            self.analysis.axis,
+            mac_budget=self.analysis.mac_budget,
+            tech=self.space.tech,
+            thermal_limit=self.constraints.thermal_limit_c,
+            **self.analysis.params,
+        )
+        return {
+            "strategies": list(MESH_STRATEGIES),
+            "names": names,
+            "totals": totals,
+            "axis": self.analysis.axis,
+        }
+
+    def _run_sweep(self, stream) -> dict:
+        fig = self.analysis.figure
+        budgets, tiers = self.space.mac_budgets, self.space.tiers
+        if budgets is None or self.space.rows is not None or self.space.layout != "product":
+            raise ValueError(
+                "sweep figures need a product space (mac_budgets x tiers, "
+                "no explicit rows/cols)"
+            )
+        if self.constraints != ConstraintSpec():
+            raise ValueError(
+                "sweep figures reproduce the paper's unconstrained sweeps; "
+                "drop the non-default constraints (use kind='evaluate' or "
+                "'pareto' for constrained studies)"
+            )
+        if fig == "fig7":
+            if self.space.dataflow != "dos":
+                raise ValueError(
+                    "the fig7 optimal-tier search is defined for the dOS "
+                    "dataflow only"
+                )
+            max_tiers = max(tiers)
+            if tiers != tuple(range(1, max_tiers + 1)):
+                raise ValueError("fig7 sweeps tiers 1..max; use tiers=range(1, T+1)")
+            best, best_cycles = optimal_tiers_batched(
+                stream.workloads,
+                budgets,
+                max_tiers=max_tiers,
+                mode=self.space.mode,
+                backend=self.analysis.backend,
+            )
+            return {
+                "mac_budgets": list(budgets),
+                "max_tiers": max_tiers,
+                "optimal_tiers": best,
+                "best_cycles": best_cycles,
+                "medians": [float(np.median(best[:, bi])) for bi in range(len(budgets))],
+            }
+        # fig5/fig6: one perf-only evaluate over the product grid,
+        # reshaped (workload, budget, tier) — budget-major point order.
+        res = self._evaluate(stream, metrics=("perf",))
+        W = stream.workloads.shape[0]
+        speedup = res.speedup.reshape(W, len(budgets), len(tiers))
+        return {
+            "mac_budgets": list(budgets),
+            "tiers": list(tiers),
+            "workloads": stream.workloads.tolist(),
+            "speedup": speedup,
+        }
+
+    # -- convenience --------------------------------------------------------
+
+    @classmethod
+    def example(cls, kind: str = "evaluate") -> "Study":
+        """A small runnable template spec per analysis kind (the CLI's
+        ``example-spec`` source — each finishes in seconds)."""
+        validate_option("analysis kind", kind, ANALYSIS_KINDS)
+        gemms = ((64, 12100, 147), (512, 784, 128))
+        space = SpaceSpec(mac_budgets=(2**14, 2**16), tiers=tuple(range(1, 9)))
+        if kind == "schedule":
+            return cls(
+                name="example-schedule",
+                workload=WorkloadSpec(kind="network", arch="smollm-135m",
+                                      shape="decode_32k"),
+                space=space,
+                analysis=AnalysisSpec(kind="schedule"),
+            )
+        if kind == "advise":
+            return cls(
+                name="example-advise",
+                workload=WorkloadSpec(kind="gemms", gemms=gemms),
+                analysis=AnalysisSpec(kind="advise", axis=16, mac_budget=2**16),
+            )
+        if kind == "sweep":
+            return cls(
+                name="example-sweep-fig5",
+                workload=WorkloadSpec(kind="gemms",
+                                      gemms=((64, 255, 147), (64, 12100, 147))),
+                space=space,
+                analysis=AnalysisSpec(kind="sweep", figure="fig5"),
+            )
+        return cls(
+            name=f"example-{kind}",
+            workload=WorkloadSpec(kind="gemms", gemms=gemms),
+            space=space,
+            analysis=AnalysisSpec(kind=kind),
+        )
+
+
+# ---------------------------------------------------------------------------
+# The artifact
+# ---------------------------------------------------------------------------
+
+def _restore_payload(kind: str, payload: dict) -> dict:
+    """Re-type a JSON-decoded payload (inverse of ``_jsonify``)."""
+    out = dict(payload)
+    if "result" in out and not isinstance(out["result"], EvalResult):
+        out["result"] = EvalResult.from_dict(out["result"])
+    if "report" in out and not isinstance(out["report"], NetworkReport):
+        out["report"] = NetworkReport.from_dict(out["report"])
+    for key, dt in (
+        ("constraint_mask", bool),
+        ("pareto_mask", bool),
+        ("totals", np.float64),
+        ("speedup", np.float64),
+        ("best_cycles", np.float64),
+        ("optimal_tiers", np.int64),
+    ):
+        if key in out and not isinstance(out[key], np.ndarray):
+            out[key] = np.asarray(out[key], dtype=dt)
+    if kind == "advise" and not isinstance(out.get("names"), np.ndarray):
+        out["names"] = np.asarray(out["names"])
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class StudyResult:
+    """Versioned, serializable result artifact: inputs echoed + payload.
+
+    ``payload`` is kind-specific and array-backed in memory (see the
+    module docstring); ``to_dict``/``to_json`` give the JSON form and
+    ``from_dict``/``from_json``/``load`` restore the typed objects.
+    """
+
+    study: Study
+    kind: str
+    payload: dict
+    version: int = SPEC_VERSION
+
+    # typed accessors ------------------------------------------------------
+    @property
+    def result(self) -> EvalResult | None:
+        """The batched ``EvalResult`` (evaluate/pareto kinds)."""
+        return self.payload.get("result")
+
+    @property
+    def report(self) -> NetworkReport | None:
+        """The ``NetworkReport`` (schedule kind)."""
+        return self.payload.get("report")
+
+    def to_dict(self) -> dict:
+        return {
+            "version": self.version,
+            "kind": self.kind,
+            "study": self.study.to_dict(),
+            "payload": _jsonify(self.payload),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StudyResult":
+        version = int(d.get("version", SPEC_VERSION))
+        if version > SPEC_VERSION:
+            raise ValueError(
+                f"artifact version {version} is newer than supported {SPEC_VERSION}"
+            )
+        kind = str(d["kind"])
+        return cls(
+            study=Study.from_dict(d["study"]),
+            kind=kind,
+            payload=_restore_payload(kind, d["payload"]),
+            version=version,
+        )
+
+    def to_json(self, indent: int | None = 1) -> str:
+        # allow_nan=False: artifacts are strict JSON; non-finite values
+        # travel as the _jsonify string encoding instead
+        return json.dumps(self.to_dict(), indent=indent, allow_nan=False)
+
+    @classmethod
+    def from_json(cls, s: str) -> "StudyResult":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.write_text(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path) -> "StudyResult":
+        return cls.from_json(pathlib.Path(path).read_text())
+
+    def describe(self) -> str:
+        """One-line human summary (what the CLI prints)."""
+        name = self.study.name or "<unnamed>"
+        if self.kind in ("evaluate", "pareto"):
+            res = self.result
+            W, P = res.valid.shape
+            extra = (
+                f", {int(self.payload['pareto_mask'].sum())} on the frontier"
+                if "pareto_mask" in self.payload
+                else ""
+            )
+            return (
+                f"{name}: {self.kind} {W} workloads x {P} design points — "
+                f"{self.payload['n_feasible']}/{self.payload['n_valid']} "
+                f"valid points feasible{extra}"
+            )
+        if self.kind == "schedule":
+            rep = self.report
+            fx = rep.fixed
+            d = np.asarray(fx.design).reshape(-1)
+            return (
+                f"{name}: schedule {rep.arch}/{rep.shape} — fixed "
+                f"{int(d[0])}x{int(d[1])}x{int(d[2])} at {fx.total_cycles:.3e} "
+                f"cycles, {fx.speedup_vs_2d:.2f}x vs 2D"
+            )
+        if self.kind == "advise":
+            names = np.asarray(self.payload["names"])
+            u, c = np.unique(names, return_counts=True)
+            mix = ", ".join(f"{n}: {k}" for n, k in zip(u.tolist(), c.tolist()))
+            return f"{name}: advise axis={self.payload['axis']} — winners {mix}"
+        fig = self.study.analysis.figure
+        if fig == "fig7":
+            med = ", ".join(f"{m:g}" for m in self.payload["medians"])
+            return f"{name}: sweep {fig} — median optimal tiers [{med}]"
+        s = np.asarray(self.payload["speedup"], dtype=np.float64)
+        with np.errstate(invalid="ignore"):
+            peak = float(np.nanmax(s))
+        return f"{name}: sweep {fig} — peak 3D-vs-2D speedup {peak:.2f}x"
