@@ -113,7 +113,7 @@ def _note(a):
     return "near roofline: block-size/layout tuning only"
 
 
-def dse_section(mac_budgets=(2**14, 2**16, 2**18), max_tiers=16):
+def dse_section(mac_budgets=(2**14, 2**16, 2**18), max_tiers=16, cache=None):
     """Study-backed DSE summary: per Table-I workload x MAC budget, the
     optimal tier count with its speedup, power, perf/area and T_max —
     one declarative ``evaluate`` study over the full grid (a single
@@ -131,7 +131,7 @@ def dse_section(mac_budgets=(2**14, 2**16, 2**18), max_tiers=16):
         workload=WorkloadSpec(kind="gemms", gemms=wl),
         space=SpaceSpec(mac_budgets=mac_budgets,
                         tiers=tuple(range(1, max_tiers + 1))),
-    ).run().result
+    ).run(cache=cache).result
     W, B, T = len(wl), len(mac_budgets), max_tiers
     cyc = np.where(res.feasible, res.cycles, np.inf).reshape(W, B, T)
     best = np.argmin(cyc, axis=2)  # optimal feasible tier per (workload, budget)
@@ -164,7 +164,7 @@ def dse_section(mac_budgets=(2**14, 2**16, 2**18), max_tiers=16):
     return "\n".join(lines) + "\n"
 
 
-def network_section(shapes=("train_4k", "prefill_32k", "decode_32k")):
+def network_section(shapes=("train_4k", "prefill_32k", "decode_32k"), cache=None):
     """Network-level results: one declarative ``schedule`` study per
     model-zoo cell — lowered to its GEMM stream and scheduled through
     the engine, per-layer-optimal vs one fixed array design, end-to-end
@@ -193,7 +193,7 @@ def network_section(shapes=("train_4k", "prefill_32k", "decode_32k")):
             name=f"report-network-{arch}-{shape}",
             workload=WorkloadSpec(kind="network", arch=arch, shape=shape),
             analysis=AnalysisSpec(kind="schedule"),
-        ).run().report
+        ).run(cache=cache).report
         fx, pl = rep.fixed, rep.per_layer
         r, c, l = (int(x) for x in np.asarray(fx.design).reshape(-1)[:3])
         lines.append(
@@ -206,19 +206,26 @@ def network_section(shapes=("train_4k", "prefill_32k", "decode_32k")):
     return "\n".join(lines) + "\n"
 
 
-def main(sections=None):
+def main(sections=None, cache=None):
     """Regenerate the requested sections (None = all). This is what
-    ``python -m repro report`` drives."""
+    ``python -m repro report`` drives. ``cache`` (a directory path)
+    makes the live DSE/network studies chunk-cached: re-generating the
+    report recomputes nothing that already ran — the sections come out
+    bit-identical either way (chunking never changes results)."""
     sections = set(sections) if sections else {"dryrun", "roofline", "dse", "network"}
+    if cache is not None:
+        from repro.core.cache import ResultCache
+
+        cache = cache if isinstance(cache, ResultCache) else ResultCache(cache)
     arts = load() if sections & {"dryrun", "roofline"} else {}
     if "dryrun" in sections:
         (HERE / "dryrun_section.md").write_text(dryrun_section(arts))
     if "roofline" in sections:
         (HERE / "roofline_section.md").write_text(roofline_section(arts))
     if "dse" in sections:
-        (HERE / "dse_section.md").write_text(dse_section())
+        (HERE / "dse_section.md").write_text(dse_section(cache=cache))
     if "network" in sections:
-        (HERE / "network_section.md").write_text(network_section())
+        (HERE / "network_section.md").write_text(network_section(cache=cache))
     if "roofline" not in sections:
         return
     # machine-readable summary for the hillclimb

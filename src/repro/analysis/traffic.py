@@ -63,37 +63,52 @@ def traffic_bytes_per_device(
     # --- per-layer activation traffic (per local token) ---------------------
     # residual r/w (~6E), qkv out, attn o in/out, mlp hidden r+w (~3F incl
     # gate/up write + read), norms (~2E). Heads dims sharded over model.
-    attn_io = (h * hd + 2 * kvh * hd + 2 * h * hd) / model_ax
-    if cfg.family in ("ssm", "hybrid"):
-        di = cfg.ssm_expand * e
-        blk = (8 * e + (4 * di + 2 * cfg.ssm_state) / model_ax + 2 * di / model_ax)
+    # Mixed-family layer split: hybrids (zamba2) run an SSM backbone of
+    # n_layers blocks PLUS a weight-shared attention+MLP block applied
+    # every attn_every layers (core.network._lower_hybrid) — attention
+    # accounting scales with n_attn_layers, SSM accounting with
+    # n_ssm_layers, so neither component is double- or zero-counted.
+    # Pure-attention families have n_attn = n_layers; pure SSM n_ssm =
+    # n_layers.
+    if cfg.family == "hybrid":
+        n_attn_layers = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        n_ssm_layers = cfg.n_layers
+    elif cfg.family == "ssm":
+        n_attn_layers, n_ssm_layers = 0, cfg.n_layers
     else:
-        blk = 8 * e / model_ax + attn_io + 3 * f / model_ax
-    fwd_act = cfg.n_layers * tokens_local * blk * _B2
+        n_attn_layers, n_ssm_layers = cfg.n_layers, 0
+    attn_io = (h * hd + 2 * kvh * hd + 2 * h * hd) / model_ax
+    attn_blk = 8 * e / model_ax + attn_io + 3 * f / model_ax
+    di = cfg.ssm_expand * e
+    ssm_blk = 8 * e + (4 * di + 2 * cfg.ssm_state) / model_ax + 2 * di / model_ax
+    fwd_act = (
+        tokens_local
+        * (n_attn_layers * attn_blk + n_ssm_layers * ssm_blk)
+        * _B2
+    )
     act_traffic = fwd_act * (3.0 if mode == "train" else 1.0)
 
     # --- attention kernel HBM traffic ----------------------------------------
-    if cfg.family not in ("ssm",):
+    if n_attn_layers:
         qkv = tokens_local * (h + 2 * kvh) * hd / model_ax
         o = tokens_local * h * hd / model_ax
         per_layer = (qkv + o) * _B2
         if mode == "train":
             per_layer *= 3.0  # bwd rereads qkv/o/do + writes dq/dk/dv
-        act_traffic += cfg.n_layers * per_layer
+        act_traffic += n_attn_layers * per_layer
 
     # --- kv cache / state (decode) ---------------------------------------------
     if mode == "decode":
-        if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        if n_attn_layers:
             cache = (
-                cfg.n_layers * shape.global_batch * shape.seq_len
+                n_attn_layers * shape.global_batch * shape.seq_len
                 * 2 * kvh * hd * _B2 / n_chips
             )
             act_traffic += cache  # read the full local cache shard once
-        if cfg.family in ("ssm", "hybrid"):
-            di = cfg.ssm_expand * e
+        if n_ssm_layers:
             nst = (di // cfg.ssm_head_dim) * cfg.ssm_state * cfg.ssm_head_dim
             act_traffic += (
-                cfg.n_layers * shape.global_batch * nst * _B4 * 2 / n_chips
+                n_ssm_layers * shape.global_batch * nst * _B4 * 2 / n_chips
             )
 
     # --- logits ----------------------------------------------------------------

@@ -4,7 +4,12 @@ Subcommands:
 
 - ``run <spec.json>``: load a declarative ``Study`` spec, compile it
   through the batched engine, and write the versioned ``StudyResult``
-  artifact (JSON). ``-`` reads the spec from stdin.
+  artifact (JSON). ``-`` reads the spec from stdin. ``--cache DIR``
+  stores every evaluated sub-grid chunk content-addressed under DIR
+  (spec-hash keyed; see ``core.cache``); ``--resume DIR`` re-runs the
+  spec persisted inside an existing cache directory, loading finished
+  chunks and computing only the missing ones — the recovery path for
+  interrupted large-scale sweeps.
 - ``example-spec <kind>``: print a small runnable template spec for any
   analysis kind (evaluate | schedule | pareto | advise | sweep) —
   ``python -m repro example-spec evaluate > spec.json`` then ``run`` it.
@@ -29,9 +34,10 @@ import pathlib
 import subprocess
 import sys
 
+from .core.cache import DEFAULT_CACHE_DIR, ResultCache
 from .core.study import ANALYSIS_KINDS, Study
 
-_BENCHES = ("dse", "network", "study")
+_BENCHES = ("dse", "network", "study", "scale")
 
 
 def _find_repo_root() -> pathlib.Path:
@@ -46,28 +52,69 @@ def _find_repo_root() -> pathlib.Path:
     )
 
 
+def _find_resume_spec(resume: pathlib.Path) -> pathlib.Path:
+    """Locate spec.json inside a cache directory (study dir or root)."""
+    if (resume / "spec.json").is_file():
+        return resume / "spec.json"
+    specs = sorted(resume.glob("*/spec.json"))
+    if len(specs) == 1:
+        return specs[0]
+    if not specs:
+        raise SystemExit(
+            f"error: no spec.json under {resume} — point --resume at a cache "
+            "directory written by `repro run --cache`"
+        )
+    raise SystemExit(
+        f"error: {resume} holds {len(specs)} cached studies; point --resume "
+        "at one study directory: " + ", ".join(str(s.parent) for s in specs)
+    )
+
+
 def _cmd_run(args) -> int:
-    if args.spec == "-":
+    cache = None
+    if args.resume:
+        if args.spec:
+            raise SystemExit("error: give either a spec file or --resume, not both")
+        if args.cache is not None:
+            raise SystemExit(
+                "error: --resume already names the cache directory; drop --cache"
+            )
+        spec_path = _find_resume_spec(pathlib.Path(args.resume))
+        text = spec_path.read_text()
+        src = str(spec_path)
+        cache = ResultCache(spec_path.parent.parent)
+    elif args.spec == "-":
         text = sys.stdin.read()
         src = "<stdin>"
-    else:
+    elif args.spec:
         path = pathlib.Path(args.spec)
         if not path.exists():
             raise SystemExit(f"error: spec file {path} does not exist")
         text = path.read_text()
         src = str(path)
+    else:
+        raise SystemExit("error: need a spec file ('-' for stdin) or --resume DIR")
     try:
         study = Study.from_json(text)
     except (ValueError, KeyError, TypeError, json.JSONDecodeError) as e:
         # TypeError covers misspelled spec fields (unexpected kwargs)
         raise SystemExit(f"error: invalid study spec {src}: {e}") from None
-    result = study.run()
+    if cache is None and args.cache is not None:
+        cache = ResultCache(args.cache or DEFAULT_CACHE_DIR)
+    result = study.run(cache=cache)
     if args.out:
         out = result.save(args.out)
         print(f"wrote {out}")
     else:
         print(result.to_json())
     print(result.describe(), file=sys.stderr)
+    if cache is not None:
+        st = result.cache
+        print(
+            f"cache {cache.study_dir(study)}: {st['hits']} chunk(s) reused, "
+            f"{st['misses']} computed",
+            file=sys.stderr,
+        )
     return 0
 
 
@@ -82,7 +129,10 @@ def _cmd_report(args) -> int:
     spec = importlib.util.spec_from_file_location("repro_make_report", path)
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
-    mod.main(sections=args.sections)
+    cache = None
+    if args.cache is not None:
+        cache = args.cache or str(root / DEFAULT_CACHE_DIR)
+    mod.main(sections=args.sections, cache=cache)
     return 0
 
 
@@ -113,9 +163,17 @@ def build_parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="command", required=True)
 
     run = sub.add_parser("run", help="run a Study spec, write the artifact")
-    run.add_argument("spec", help="path to a Study spec JSON ('-' for stdin)")
+    run.add_argument("spec", nargs="?", default=None,
+                     help="path to a Study spec JSON ('-' for stdin)")
     run.add_argument("--out", "-o", default=None,
                      help="artifact path (default: print JSON to stdout)")
+    run.add_argument("--cache", nargs="?", const="", default=None, metavar="DIR",
+                     help="content-addressed chunk cache directory "
+                          f"(default when flag given: {DEFAULT_CACHE_DIR})")
+    run.add_argument("--resume", default=None, metavar="DIR",
+                     help="continue an interrupted cached run: DIR is the "
+                          "cache root (single study) or one <spec-hash> "
+                          "study directory; only missing chunks are computed")
     run.set_defaults(fn=_cmd_run)
 
     ex = sub.add_parser("example-spec", help="print a runnable template spec")
@@ -127,6 +185,9 @@ def build_parser() -> argparse.ArgumentParser:
     rep.add_argument("--sections", nargs="*", default=None,
                      choices=["dryrun", "roofline", "dse", "network"],
                      help="subset to regenerate (default: all)")
+    rep.add_argument("--cache", nargs="?", const="", default=None, metavar="DIR",
+                     help="chunk-cache the live DSE/network studies "
+                          f"(default when flag given: {DEFAULT_CACHE_DIR})")
     rep.set_defaults(fn=_cmd_report)
 
     be = sub.add_parser("bench", help="run the repo benchmarks")

@@ -79,6 +79,32 @@ __all__ = [
 
 _DEFAULT_CHUNK = 2048
 _ALL_METRICS = ("perf", "area", "power", "thermal")
+#: evaluate() streams point-blocks once the (W, P) result matrix would
+#: exceed this many cells — bounds peak memory at any grid size.
+_AUTO_STREAM_CELLS = 1 << 22
+
+
+def _resolve_shards(shard, backend: str) -> int:
+    """Shard request -> device count (deferred import: jax is lazy here).
+
+    Only the jax backend has a device axis. ``'auto'`` is best-effort
+    and portable: it means "all available parallelism", which on the
+    numpy backend is none (1). An *explicit* count, by contrast, is a
+    hard request — it errors on the numpy backend everywhere rather
+    than silently no-opping on hosts that happen to have devices.
+    """
+    if shard is None or shard == "none" or shard == 1:
+        return 1
+    if backend != "jax":
+        if shard == "auto":
+            return 1
+        raise ValueError(
+            f"shard={shard!r} requires backend='jax' (the numpy search has "
+            "no device axis); use shard='auto' for best-effort portability"
+        )
+    from ..parallel.shard_eval import resolve_shards
+
+    return resolve_shards(shard)
 
 
 def _as_1d_int(x) -> np.ndarray:
@@ -167,6 +193,24 @@ class DesignGrid:
     def explicit(cls, workloads, rows, cols, tiers, **kw) -> "DesignGrid":
         """Design points with fixed per-tier (rows, cols) — no search."""
         return cls(workloads=workloads, tiers=tiers, rows=rows, cols=cols, **kw)
+
+    def subset(self, lo: int, hi: int) -> "DesignGrid":
+        """The sub-grid of design points [lo, hi) (same workloads).
+
+        The engine's search is rowwise independent, so evaluating a
+        subset and slicing the full evaluation give identical bits —
+        this is what makes streaming and chunk caching exact.
+        """
+        kw: dict = {"workloads": self.workloads, "tiers": self.tiers[lo:hi],
+                    "mode": self.mode}
+        for name in ("mac_budgets", "rows", "cols"):
+            v = getattr(self, name)
+            if v is not None:
+                kw[name] = v[lo:hi]
+        for name in ("dataflow", "tech"):
+            v = getattr(self, name)
+            kw[name] = v if isinstance(v, str) else v[lo:hi]
+        return DesignGrid(**kw)
 
     def to_dict(self) -> dict:
         """JSON-compatible form; ``from_dict`` is the exact inverse."""
@@ -275,6 +319,25 @@ class EvalResult:
             kw[f.name] = np.asarray(d[f.name], dtype=dt)
         return cls(**kw)
 
+    @classmethod
+    def concat(cls, grid: DesignGrid, parts: Sequence["EvalResult"]) -> "EvalResult":
+        """Stitch point-block results back into one (W, P) result.
+
+        ``parts`` are evaluations of consecutive ``grid.subset`` blocks
+        (all with the same metric groups); arrays concatenate along the
+        point axis. The inverse of streaming: bit-for-bit equal to one
+        unstreamed ``evaluate(grid)``.
+        """
+        if len(parts) == 1:
+            return dataclasses.replace(parts[0], grid=grid)
+        kw: dict = {"grid": grid}
+        for f in dataclasses.fields(cls):
+            if f.name == "grid":
+                continue
+            vs = [getattr(p, f.name) for p in parts]
+            kw[f.name] = None if vs[0] is None else np.concatenate(vs, axis=1)
+        return cls(**kw)
+
     def pareto_mask(
         self,
         objectives: Sequence[str] = ("cycles", "area_um2", "power_w"),
@@ -318,8 +381,14 @@ def _jax_search_fn(r_max_total: int):
     return jax.jit(run)
 
 
-def _search_batch(D1, D2, Tser, budget, backend: str, chunk: int):
-    """Chunked dispatch of the (R, C) search. Returns (r, c, tau) int64."""
+def _search_batch(D1, D2, Tser, budget, backend: str, chunk: int, n_shards: int = 1):
+    """Chunked dispatch of the (R, C) search. Returns (r, c, tau) int64.
+
+    ``n_shards`` > 1 (jax backend) splits each chunk across the local
+    JAX devices via ``parallel.shard_eval`` — same kernel, same static
+    search width, so results match the unsharded path bit-for-bit. The
+    numpy backend has no device axis and ignores ``n_shards``.
+    """
     B = D1.shape[0]
     r_out = np.empty(B, dtype=np.int64)
     c_out = np.empty(B, dtype=np.int64)
@@ -334,6 +403,18 @@ def _search_batch(D1, D2, Tser, budget, backend: str, chunk: int):
         r_max = int(np.max(np.minimum(D1, budget)))
         r_max = 1 << max(int(np.ceil(np.log2(max(r_max, 1)))), 0)
         with enable_x64():
+            if n_shards > 1:
+                from ..parallel.shard_eval import sharded_search
+
+                step = chunk * n_shards  # ~chunk rows per device
+                for lo in range(0, B, step):
+                    hi = min(lo + step, B)
+                    r, c, t = sharded_search(
+                        D1[lo:hi], D2[lo:hi], Tser[lo:hi], budget[lo:hi],
+                        r_max, n_shards,
+                    )
+                    r_out[lo:hi], c_out[lo:hi], t_out[lo:hi] = r, c, t
+                return r_out, c_out, t_out
             fn = _jax_search_fn(r_max)
             for lo in range(0, B, chunk):
                 hi = min(lo + chunk, B)
@@ -453,7 +534,8 @@ def _search_from_tables(tables, sel, Tser, r_max: int):
     return r, c, np.where(np.isfinite(t), t, INVALID_CYCLES).astype(np.int64)
 
 
-def _optimize_flat(M, K, N, n_macs, tiers, dataflow, mode, backend, chunk):
+def _optimize_flat(M, K, N, n_macs, tiers, dataflow, mode, backend, chunk,
+                   n_shards: int = 1):
     """Batched shape optimization (flat arrays) honoring invalid budgets."""
     budget = n_macs // tiers
     ok = budget >= 1
@@ -462,7 +544,7 @@ def _optimize_flat(M, K, N, n_macs, tiers, dataflow, mode, backend, chunk):
     if mode == "square":
         r, c, t = _square_rc(np, D1, D2, Tser, bsafe)
     else:
-        r, c, t = _search_batch(D1, D2, Tser, bsafe, backend, chunk)
+        r, c, t = _search_batch(D1, D2, Tser, bsafe, backend, chunk, n_shards)
     t = np.where(ok, t, INVALID_CYCLES)
     return r, c, t
 
@@ -477,6 +559,8 @@ def evaluate(
     metrics: Sequence[str] = _ALL_METRICS,
     chunk: int = _DEFAULT_CHUNK,
     thermal_limit: float = C.THERMAL_BUDGET_C,
+    shard: int | str | None = None,
+    stream: int | None = None,
 ) -> EvalResult:
     """Evaluate every (workload, design point) pair of the grid at once.
 
@@ -486,6 +570,16 @@ def evaluate(
     intermediates; results are independent of it. ``thermal_limit``
     sets the junction temperature [C] behind
     ``within_thermal_budget`` / ``feasible``.
+
+    ``shard``: ``'auto'`` splits the (R, C) search across the host's
+    JAX devices (jax backend; ``parallel.shard_eval``); an int requests
+    that many device shards; ``None``/``'none'`` stays single-device.
+    ``stream`` caps how many design points are evaluated per pass —
+    blocks are evaluated consecutively and stitched with
+    ``EvalResult.concat`` so peak memory stays bounded at any grid
+    size. By default grids past ~4M result cells stream automatically.
+    Neither knob changes a single result bit (the search is rowwise
+    independent; regression-pinned).
     """
     validate_option("backend", backend, VALID_BACKENDS)
     metrics = {validate_option("metric", m, VALID_METRICS) for m in metrics}
@@ -493,7 +587,36 @@ def evaluate(
         metrics.add("power")
     if "power" in metrics:
         metrics.add("area")
+    n_shards = _resolve_shards(shard, backend)
 
+    W, P = grid.n_workloads, grid.n_points
+    if stream is None:
+        block = P if W * P <= _AUTO_STREAM_CELLS else max(
+            1, _AUTO_STREAM_CELLS // max(W, 1)
+        )
+    else:
+        block = max(1, int(stream))
+    if block < P:
+        parts = [
+            _evaluate_block(
+                grid.subset(lo, min(lo + block, P)), backend, metrics, chunk,
+                thermal_limit, n_shards,
+            )
+            for lo in range(0, P, block)
+        ]
+        return EvalResult.concat(grid, parts)
+    return _evaluate_block(grid, backend, metrics, chunk, thermal_limit, n_shards)
+
+
+def _evaluate_block(
+    grid: DesignGrid,
+    backend: str,
+    metrics: set,
+    chunk: int,
+    thermal_limit: float,
+    n_shards: int = 1,
+) -> EvalResult:
+    """One unstreamed evaluation pass (metrics already resolved)."""
     W, P = grid.n_workloads, grid.n_points
     # Flatten workload-major: flat index = w * P + p  -> reshape to (W, P).
     Mf = np.repeat(grid.workloads[:, 0], P)
@@ -532,7 +655,7 @@ def evaluate(
             cyc[sel] = (2 * r_ + c_ + Tser - 2) * (-(-D1 // r_)) * (-(-D2 // c_))
         else:
             r_, c_, t_ = _optimize_flat(
-                M_, K_, N_, b_, L_, str(df), grid.mode, backend, chunk
+                M_, K_, N_, b_, L_, str(df), grid.mode, backend, chunk, n_shards
             )
             rows[sel], cols[sel], cyc[sel] = r_, c_, t_
         # Budget-matched optimized 2D baseline of the same dataflow
@@ -543,7 +666,7 @@ def evaluate(
         _, _, t2 = _optimize_flat(
             uniq[:, 0], uniq[:, 1], uniq[:, 2], uniq[:, 3],
             np.ones(len(uniq), dtype=np.int64), str(df), grid.mode,
-            backend, chunk,
+            backend, chunk, n_shards,
         )
         cyc2d[sel] = t2[inv]
 
@@ -648,6 +771,7 @@ def optimal_tiers_batched(
     mode: str = "opt",
     backend: str = "numpy",
     chunk: int = _DEFAULT_CHUNK,
+    shard: int | str | None = None,
 ):
     """Batched Fig.-7 argmin over tier count for every (workload, budget).
 
@@ -665,7 +789,10 @@ def optimal_tiers_batched(
     Nf = np.repeat(wl[:, 2], B * T)
     Lf = np.tile(np.arange(1, T + 1, dtype=np.int64), W * B)
     nm = np.tile(np.repeat(budgets, T), W)
-    _, _, t = _optimize_flat(Mf, Kf, Nf, nm, Lf, "dos", mode, backend, chunk)
+    _, _, t = _optimize_flat(
+        Mf, Kf, Nf, nm, Lf, "dos", mode, backend, chunk,
+        _resolve_shards(shard, backend),
+    )
     cyc = np.where(t != INVALID_CYCLES, t, 0).astype(np.float64)
     cyc[t == INVALID_CYCLES] = np.inf
     cyc = cyc.reshape(W, B, T)
@@ -826,6 +953,7 @@ def schedule(
     thermal_limit: float = C.THERMAL_BUDGET_C,
     require_feasible: bool = True,
     chunk: int | None = None,
+    shard: int | str | None = None,
 ) -> NetworkReport:
     """Evaluate a whole lowered network stream on the design grid.
 
@@ -864,7 +992,7 @@ def schedule(
     # only the searched (rows, cols) feed the candidate set, so skip
     # the PPA metric groups here; feasibility is applied in pass 2.
     grid = DesignGrid.product(wl, mac_budgets, tiers, dataflow=dataflow, tech=tech)
-    res1 = evaluate(grid, backend=backend, metrics=("perf",), chunk=chunk)
+    res1 = evaluate(grid, backend=backend, metrics=("perf",), chunk=chunk, shard=shard)
 
     # Candidate fixed designs: every distinct per-layer optimum. The
     # per-layer policy minimizes over the same candidate columns, which
@@ -886,7 +1014,9 @@ def schedule(
         wl, rows=cand[:, 0], cols=cand[:, 1], tiers=cand[:, 2],
         dataflow=dataflow, tech=tech,
     )
-    res2 = evaluate(grid2, backend=backend, chunk=chunk, thermal_limit=thermal_limit)
+    res2 = evaluate(
+        grid2, backend=backend, chunk=chunk, thermal_limit=thermal_limit, shard=shard
+    )
     feas = res2.feasible if require_feasible else res2.valid
     n_thermal_masked = int(np.sum(np.all(res2.valid, axis=0) & ~np.all(res2.feasible, axis=0)))
 

@@ -42,6 +42,7 @@ import pathlib
 
 import numpy as np
 
+from .cache import ResultCache
 from .engine import (
     MESH_STRATEGIES,
     DesignGrid,
@@ -376,12 +377,15 @@ class AnalysisSpec:
 
     ``chunk=None`` uses the engine default, except for network
     workloads where the adaptive bound kicks in (token-sized M dims).
+    ``shard`` is the engine's device-sharding knob (``'auto'`` = split
+    the search over all local JAX devices; results are unchanged).
     """
 
     kind: str = "evaluate"
     metrics: tuple[str, ...] = ("perf", "area", "power", "thermal")
     backend: str = "numpy"
     chunk: int | None = None
+    shard: int | str | None = None
     objectives: tuple[str, ...] = ("cycles", "area_um2", "power_w")
     axis: int = 16
     mac_budget: int | None = None
@@ -391,6 +395,17 @@ class AnalysisSpec:
     def __post_init__(self):
         validate_option("analysis kind", self.kind, ANALYSIS_KINDS)
         validate_option("backend", self.backend, VALID_BACKENDS)
+        if self.shard is not None and self.shard not in ("auto", "none"):
+            try:
+                n = int(self.shard)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"shard must be None, 'auto', 'none' or a positive int, "
+                    f"got {self.shard!r}"
+                ) from None
+            if n < 1:
+                raise ValueError(f"shard must be >= 1, got {n}")
+            object.__setattr__(self, "shard", n)
         object.__setattr__(
             self, "metrics", tuple(validate_option("metric", m, VALID_METRICS)
                                    for m in self.metrics)
@@ -500,11 +515,38 @@ class Study:
 
     # -- execution ----------------------------------------------------------
 
-    def run(self) -> "StudyResult":
+    def run(self, cache=None) -> "StudyResult":
+        """Compile the specs into the engine and return the artifact.
+
+        ``cache`` (a path or ``core.cache.ResultCache``) turns on
+        content-addressed chunk caching: the grid is split into
+        sub-grid chunks keyed by the canonical spec hash + index range,
+        already-cached chunks are loaded instead of recomputed
+        (bit-for-bit — chunking never changes results), and freshly
+        computed chunks are stored so an interrupted run resumes where
+        it left off (``python -m repro run --resume``). The returned
+        ``StudyResult.cache`` carries the hit/miss counters.
+        """
+        if cache is not None and not isinstance(cache, ResultCache):
+            cache = ResultCache(cache)
         stream = self.workload.resolve()
         runner = getattr(self, f"_run_{self.analysis.kind}")
-        payload = runner(stream)
-        return StudyResult(study=self, kind=self.analysis.kind, payload=payload)
+        if cache is None:
+            payload = runner(stream)
+            return StudyResult(study=self, kind=self.analysis.kind, payload=payload)
+        cache.prepare(self)
+        h0, m0 = cache.hits, cache.misses  # shared caches: report this run only
+        payload = runner(stream, cache=cache)
+        stats = dict(cache.stats())
+        stats["hits"] -= h0
+        stats["misses"] -= m0
+        stats["chunks"] = stats["hits"] + stats["misses"]
+        result = StudyResult(
+            study=self, kind=self.analysis.kind, payload=payload,
+            cache=stats,
+        )
+        cache.store_result(self, result)
+        return result
 
     def _chunk_for(self, workloads) -> int | None:
         a = self.analysis
@@ -516,22 +558,38 @@ class Study:
             return _adaptive_chunk(workloads, self.space.mac_budgets)
         return None
 
-    def _evaluate(self, stream, metrics=None) -> EvalResult:
+    def _evaluate(self, stream, metrics=None, cache: ResultCache | None = None) -> EvalResult:
         grid = self.space.to_grid(stream.workloads)
         kw = {}
         chunk = self._chunk_for(stream.workloads)
         if chunk is not None:
             kw["chunk"] = chunk
-        return evaluate(
-            grid,
-            backend=self.analysis.backend,
-            metrics=self.analysis.metrics if metrics is None else metrics,
-            thermal_limit=self.constraints.thermal_limit_c,
-            **kw,
-        )
+        kw["backend"] = self.analysis.backend
+        kw["metrics"] = self.analysis.metrics if metrics is None else metrics
+        kw["thermal_limit"] = self.constraints.thermal_limit_c
+        kw["shard"] = self.analysis.shard
+        if cache is None:
+            return evaluate(grid, **kw)
+        # Chunked, cached execution: consecutive point-blocks, each
+        # independently evaluated (or loaded) and stitched — identical
+        # bits to the one-pass evaluate by rowwise independence.
+        W, P = grid.n_workloads, grid.n_points
+        block = max(1, cache.block_cells // max(W, 1))
+        parts = []
+        for lo in range(0, P, block):
+            hi = min(lo + block, P)
+            key = f"points-{lo:010d}-{hi:010d}"
+            d = cache.load_chunk(self, key)
+            if d is not None:
+                part = EvalResult.from_dict(d)
+            else:
+                part = evaluate(grid.subset(lo, hi), **kw)
+                cache.store_chunk(self, key, _jsonify(part.to_dict()))
+            parts.append(part)
+        return EvalResult.concat(grid, parts)
 
-    def _run_evaluate(self, stream) -> dict:
-        res = self._evaluate(stream)
+    def _run_evaluate(self, stream, cache: ResultCache | None = None) -> dict:
+        res = self._evaluate(stream, cache=cache)
         mask = self.constraints.mask(res)
         return {
             "result": res,
@@ -540,8 +598,8 @@ class Study:
             "n_feasible": int(mask.sum()),
         }
 
-    def _run_pareto(self, stream) -> dict:
-        payload = self._run_evaluate(stream)
+    def _run_pareto(self, stream, cache: ResultCache | None = None) -> dict:
+        payload = self._run_evaluate(stream, cache=cache)
         res, mask = payload["result"], payload["constraint_mask"]
         res_f = (
             dataclasses.replace(res, within_thermal_budget=mask)
@@ -555,7 +613,7 @@ class Study:
         payload["objectives"] = list(self.analysis.objectives)
         return payload
 
-    def _run_schedule(self, stream) -> dict:
+    def _run_schedule(self, stream, cache: ResultCache | None = None) -> dict:
         if self.space.rows is not None:
             raise ValueError("schedule searches array shapes; drop rows/cols")
         if self.constraints.has_caps:
@@ -565,6 +623,12 @@ class Study:
         for name in ("dataflow", "tech"):
             if not isinstance(getattr(self.space, name), str):
                 raise ValueError(f"schedule needs a single {name}, not a per-point array")
+        # schedule's two passes couple all layers (the candidate set is
+        # derived from every per-layer optimum), so it caches as one unit.
+        if cache is not None:
+            d = cache.load_chunk(self, "schedule")
+            if d is not None:
+                return _restore_payload("schedule", d)
         kw = {}
         if self.analysis.chunk is not None:
             kw["chunk"] = self.analysis.chunk
@@ -577,11 +641,15 @@ class Study:
             backend=self.analysis.backend,
             thermal_limit=self.constraints.thermal_limit_c,
             require_feasible=self.constraints.require_feasible,
+            shard=self.analysis.shard,
             **kw,
         )
-        return {"report": rep}
+        payload = {"report": rep}
+        if cache is not None:
+            cache.store_chunk(self, "schedule", _jsonify(payload))
+        return payload
 
-    def _run_advise(self, stream) -> dict:
+    def _run_advise(self, stream, cache: ResultCache | None = None) -> dict:
         from .advisor import _rank  # deferred: advisor's shim imports Study
 
         if self.constraints.has_caps:
@@ -590,6 +658,10 @@ class Study:
             )
         if not isinstance(self.space.tech, str):
             raise ValueError("advise needs a single tech, not a per-point array")
+        if cache is not None:
+            d = cache.load_chunk(self, "advise")
+            if d is not None:
+                return _restore_payload("advise", d)
         names, totals = _rank(
             stream.workloads,
             self.analysis.axis,
@@ -598,14 +670,17 @@ class Study:
             thermal_limit=self.constraints.thermal_limit_c,
             **self.analysis.params,
         )
-        return {
+        payload = {
             "strategies": list(MESH_STRATEGIES),
             "names": names,
             "totals": totals,
             "axis": self.analysis.axis,
         }
+        if cache is not None:
+            cache.store_chunk(self, "advise", _jsonify(payload))
+        return payload
 
-    def _run_sweep(self, stream) -> dict:
+    def _run_sweep(self, stream, cache: ResultCache | None = None) -> dict:
         fig = self.analysis.figure
         budgets, tiers = self.space.mac_budgets, self.space.tiers
         if budgets is None or self.space.rows is not None or self.space.layout != "product":
@@ -628,13 +703,7 @@ class Study:
             max_tiers = max(tiers)
             if tiers != tuple(range(1, max_tiers + 1)):
                 raise ValueError("fig7 sweeps tiers 1..max; use tiers=range(1, T+1)")
-            best, best_cycles = optimal_tiers_batched(
-                stream.workloads,
-                budgets,
-                max_tiers=max_tiers,
-                mode=self.space.mode,
-                backend=self.analysis.backend,
-            )
+            best, best_cycles = self._fig7_tiers(stream, budgets, max_tiers, cache)
             return {
                 "mac_budgets": list(budgets),
                 "max_tiers": max_tiers,
@@ -644,7 +713,7 @@ class Study:
             }
         # fig5/fig6: one perf-only evaluate over the product grid,
         # reshaped (workload, budget, tier) — budget-major point order.
-        res = self._evaluate(stream, metrics=("perf",))
+        res = self._evaluate(stream, metrics=("perf",), cache=cache)
         W = stream.workloads.shape[0]
         speedup = res.speedup.reshape(W, len(budgets), len(tiers))
         return {
@@ -653,6 +722,39 @@ class Study:
             "workloads": stream.workloads.tolist(),
             "speedup": speedup,
         }
+
+    def _fig7_tiers(self, stream, budgets, max_tiers: int, cache: ResultCache | None):
+        """The fig7 optimal-tier search, chunked over *workloads*.
+
+        Each workload's argmin is independent of every other workload,
+        so workload-blocks are the natural cache/stream unit for the
+        Fig-7-style million-point sweeps (``benchmarks/scale_bench.py``).
+        """
+        kw = dict(max_tiers=max_tiers, mode=self.space.mode,
+                  backend=self.analysis.backend, shard=self.analysis.shard)
+        wl = np.atleast_2d(np.asarray(stream.workloads, dtype=np.int64))
+        if cache is None:
+            return optimal_tiers_batched(wl, budgets, **kw)
+        W = wl.shape[0]
+        width = max(1, len(budgets) * max_tiers)
+        block = max(1, cache.block_cells // width)
+        bs, cs = [], []
+        for lo in range(0, W, block):
+            hi = min(lo + block, W)
+            key = f"workloads-{lo:010d}-{hi:010d}"
+            d = cache.load_chunk(self, key)
+            if d is None:
+                b_, c_ = optimal_tiers_batched(wl[lo:hi], budgets, **kw)
+                cache.store_chunk(
+                    self, key,
+                    _jsonify({"optimal_tiers": b_, "best_cycles": c_}),
+                )
+            else:
+                b_ = np.asarray(d["optimal_tiers"], dtype=np.int64)
+                c_ = np.asarray(d["best_cycles"], dtype=np.float64)
+            bs.append(b_)
+            cs.append(c_)
+        return np.concatenate(bs, axis=0), np.concatenate(cs, axis=0)
 
     # -- convenience --------------------------------------------------------
 
@@ -732,6 +834,8 @@ class StudyResult:
     kind: str
     payload: dict
     version: int = SPEC_VERSION
+    #: cache hit/miss counters when the run was cache-backed (else None).
+    cache: dict | None = None
 
     # typed accessors ------------------------------------------------------
     @property
@@ -745,12 +849,15 @@ class StudyResult:
         return self.payload.get("report")
 
     def to_dict(self) -> dict:
-        return {
+        out = {
             "version": self.version,
             "kind": self.kind,
             "study": self.study.to_dict(),
             "payload": _jsonify(self.payload),
         }
+        if self.cache is not None:
+            out["cache"] = _jsonify(self.cache)
+        return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "StudyResult":
@@ -765,6 +872,7 @@ class StudyResult:
             kind=kind,
             payload=_restore_payload(kind, d["payload"]),
             version=version,
+            cache=d.get("cache"),
         )
 
     def to_json(self, indent: int | None = 1) -> str:

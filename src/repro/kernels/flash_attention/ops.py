@@ -130,16 +130,21 @@ def decode_attention(
     )  # (b, kvh, g, 1, s)
 
     pos = jnp.arange(s)
-    length = jnp.asarray(length)
-    valid = pos[None, :] < jnp.broadcast_to(length, (b,))[:, None]
+    lengths = jnp.broadcast_to(jnp.asarray(length), (b,))[:, None]
+    valid = pos[None, :] < lengths
     if window is not None:
-        valid = valid & (pos[None, :] > jnp.broadcast_to(length, (b,))[:, None] - 1 - window + 0)
         # window includes the newest position (index length-1)
+        valid = valid & (pos[None, :] >= lengths - window)
     neg = jnp.finfo(jnp.float32).min * 0.7
-    logits = jnp.where(valid[:, None, None, None, :], logits, neg)
+    vmask = valid[:, None, None, None, :]
+    logits = jnp.where(vmask, logits, neg)
     m = jnp.max(logits, axis=-1, keepdims=True)
-    p = jnp.exp(logits - m)
-    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # Zero the masked slots explicitly: when NO slot is valid (length=0,
+    # or a window that excludes everything) the max trick would yield a
+    # uniform softmax over garbage — the output must be exact zeros.
+    p = jnp.where(vmask, jnp.exp(logits - m), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom > 0.0, denom, 1.0)
     o = jnp.einsum(
         "bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
         preferred_element_type=jnp.float32,

@@ -1,4 +1,5 @@
-"""Distribution: logical-axis sharding, pipeline, MoE-EP, compression."""
+"""Distribution: logical-axis sharding, pipeline, MoE-EP, compression,
+and device-sharded design-space search dispatch (``shard_eval``)."""
 
 from .axes import ShardingRules, current_rules, param_sharding, shard, use_rules
 

@@ -4,13 +4,27 @@
 hypothesis API when available; otherwise ``@given(...)`` marks just the
 property-based tests as skipped, so the deterministic tests in the same
 module still collect and run under the tier-1 ``pytest -x -q`` command.
+
+CI must never silently lose the property tests: with
+``REPRO_REQUIRE_HYPOTHESIS=1`` in the environment (set by the CI
+workflow, which installs hypothesis via the ``[test]`` extra) a missing
+hypothesis is a hard collection error instead of 7 quiet skips.
 """
+
+import os
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
 
     HAS_HYPOTHESIS = True
 except ImportError:
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+        raise ImportError(
+            "REPRO_REQUIRE_HYPOTHESIS is set but hypothesis is not "
+            "installed — `pip install hypothesis` (or `pip install -e "
+            ".[test]`) so the property tests run instead of skipping"
+        ) from None
+
     import pytest
 
     HAS_HYPOTHESIS = False

@@ -82,21 +82,24 @@ def _legacy_fig6(mac_budgets, ns, ks, M=64, tiers=4, mode="opt"):
 
 def test_fig5_matches_legacy_loop():
     budgets, ks, tiers = (2**12, 2**16), (255, 12100), tuple(range(1, 9))
-    t_new, out_new = fig5_sweep(budgets, ks, tiers)
+    with pytest.warns(DeprecationWarning, match="fig5_sweep"):
+        t_new, out_new = fig5_sweep(budgets, ks, tiers)
     t_old, out_old = _legacy_fig5(budgets, ks, tiers)
     assert t_new == t_old and out_new == out_old
 
 
 def test_fig6_matches_legacy_loop():
     budgets, ns, ks = tuple(2**p for p in range(10, 15)), (147, 1024), (784,)
-    b_new, out_new, th_new = fig6_sweep(budgets, ns, ks)
+    with pytest.warns(DeprecationWarning, match="fig6_sweep"):
+        b_new, out_new, th_new = fig6_sweep(budgets, ns, ks)
     b_old, out_old, th_old = _legacy_fig6(budgets, ns, ks)
     assert b_new == b_old and out_new == out_old and th_new == th_old
 
 
 def test_fig7_matches_legacy_loop():
     budgets = (2**14, 2**16)
-    res = fig7_scatter(budgets, n_workloads=40, seed=0, max_tiers=8)
+    with pytest.warns(DeprecationWarning, match="fig7_scatter"):
+        res = fig7_scatter(budgets, n_workloads=40, seed=0, max_tiers=8)
     wl = random_workloads(40, 0)
     for fig7, b in zip(res, budgets):
         legacy = np.array([optimal_tiers(m, k, n, b, 8)[0] for m, k, n in wl])
@@ -308,7 +311,8 @@ def test_rank_candidates_matches_scalar_advisor():
     from repro.core.advisor import GemmShard, choose_sharding, rank_candidates
 
     wl = [(8, 8192, 8192), (1 << 20, 4096, 4096), (128, 256, 512), (64, 64, 64)]
-    names, totals = rank_candidates(wl, 16)
+    with pytest.warns(DeprecationWarning, match="rank_candidates"):
+        names, totals = rank_candidates(wl, 16)
     assert totals.shape == (4, 4)
     for i, (m, k, n) in enumerate(wl):
         best = choose_sharding(GemmShard(M=m, K=k, N=n, axis=16))

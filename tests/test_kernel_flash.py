@@ -69,13 +69,74 @@ def test_traced_window_matches_static():
     np.testing.assert_allclose(np.asarray(stat), np.asarray(trac), rtol=1e-4, atol=1e-5)
 
 
-def test_decode_matches_ref():
-    b, s, h, kvh, d, L = 2, 64, 4, 2, 32, 40
-    rng = np.random.default_rng(2)
+def _mk_decode(b=2, s=64, h=4, kvh=2, d=32, seed=2):
+    rng = np.random.default_rng(seed)
     q = jnp.asarray(rng.normal(size=(b, 1, h, d)), "float32")
     kc = jnp.asarray(rng.normal(size=(b, s, kvh, d)), "float32")
     vc = jnp.asarray(rng.normal(size=(b, s, kvh, d)), "float32")
+    return q, kc, vc
+
+
+def test_decode_matches_ref():
+    L = 40
+    q, kc, vc = _mk_decode()
     for window in (None, 16):
         ref = attention_ref(q, kc[:, :L], vc[:, :L], causal=True, window=window, q_offset=L - 1)
         out = decode_attention(q, kc, vc, length=L, window=window)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_fully_masked_is_zero():
+    """length=0 (empty cache) and an everything-excluding window must
+    give exact zeros, not a uniform softmax over garbage logits."""
+    q, kc, vc = _mk_decode()
+    out = np.asarray(decode_attention(q, kc, vc, length=0))
+    assert np.all(out == 0.0)
+    # window=0 excludes even the newest slot, for every batch row
+    out = np.asarray(decode_attention(q, kc, vc, length=8, window=0))
+    assert np.all(out == 0.0)
+    # per-batch: row 0 empty -> zeros; row 1 live -> matches the ref
+    out = np.asarray(decode_attention(q, kc, vc, length=jnp.array([0, 8])))
+    assert np.all(out[0] == 0.0)
+    ref = attention_ref(q[1:], kc[1:, :8], vc[1:, :8], causal=True, q_offset=7)
+    np.testing.assert_allclose(out[1:], np.asarray(ref), rtol=1e-5, atol=1e-5)
+    assert np.any(out[1] != 0.0)
+
+
+def test_decode_per_batch_lengths_match_ref():
+    lengths = (40, 17)
+    q, kc, vc = _mk_decode()
+    out = np.asarray(decode_attention(q, kc, vc, length=jnp.array(lengths)))
+    for i, L in enumerate(lengths):
+        ref = attention_ref(
+            q[i : i + 1], kc[i : i + 1, :L], vc[i : i + 1, :L],
+            causal=True, q_offset=L - 1,
+        )
+        np.testing.assert_allclose(out[i : i + 1], np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_decode_window_includes_newest_slot():
+    """A sliding window always covers slot length-1 (the query's own
+    position); window=1 attends to exactly that slot."""
+    L = 40
+    q, kc, vc = _mk_decode()
+    out = np.asarray(decode_attention(q, kc, vc, length=L, window=1))
+    # attention over a single slot: softmax == 1 -> output is v[L-1]
+    b, _, h, d = q.shape
+    kvh = kc.shape[2]
+    # heads are kvh-major in the GQA grouping: head i reads kv head i // g
+    want = np.repeat(np.asarray(vc)[:, L - 1], h // kvh, axis=1)
+    want = want.reshape(b, 1, h, d)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+    # boundary inclusion/exclusion: window=w sees slots [L-w, L-1]
+    w = 16
+    outw = decode_attention(q, kc, vc, length=L, window=w)
+    ref = attention_ref(q, kc[:, :L], vc[:, :L], causal=True, window=w,
+                        q_offset=L - 1)
+    np.testing.assert_allclose(np.asarray(outw), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # and perturbing the newest in-window slot changes the output
+    kc2 = kc.at[:, L - 1].add(1.0)
+    out2 = decode_attention(q, kc2, vc, length=L, window=w)
+    assert not np.allclose(np.asarray(outw), np.asarray(out2))

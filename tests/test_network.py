@@ -198,25 +198,39 @@ def test_schedule_report_roundtrip():
 # Thermal feasibility as a first-class mask (regression-pinned scenarios)
 # ---------------------------------------------------------------------------
 
+def _advise(wl, axis, mac_budget=None, thermal_limit=None):
+    """Rank mesh strategies through the non-deprecated Study front door
+    (``rank_candidates`` is a deprecated shim over the same engine)."""
+    from repro.core.study import AnalysisSpec, ConstraintSpec, Study, WorkloadSpec
+
+    kw = {}
+    if thermal_limit is not None:
+        kw["constraints"] = ConstraintSpec(thermal_limit_c=thermal_limit)
+    res = Study(
+        workload=WorkloadSpec(kind="gemms", gemms=tuple(map(tuple, wl))),
+        analysis=AnalysisSpec(kind="advise", axis=axis, mac_budget=mac_budget),
+        **kw,
+    ).run()
+    return res.payload["names"], res.payload["totals"]
+
+
 def test_thermal_mask_changes_advisor_outcome():
     """shard_K (the 3D-stacked dOS mapping) wins unconstrained for a
     huge-K decode GEMM, but gets struck when the 16-tier stack would
     exceed the thermal limit — the advisor falls back to scaled-out 2D."""
-    from repro.core.advisor import rank_candidates
     from repro.core.engine import MESH_STRATEGIES
 
     wl = [(64, 1 << 20, 64)]
-    names0, totals0 = rank_candidates(wl, 16)
+    names0, totals0 = _advise(wl, 16)
     assert names0[0] == "shard_K"
     # the 16-tier 2^18-MAC stack settles at ~47.7 C (lumped model);
     # a 47 C limit renders it infeasible
-    names1, totals1 = rank_candidates(
-        wl, 16, mac_budget=2**18, thermal_limit=47.0)
+    names1, totals1 = _advise(wl, 16, mac_budget=2**18, thermal_limit=47.0)
     assert names1[0] != "shard_K"
     k = MESH_STRATEGIES.index("shard_K")
     assert np.isinf(totals1[0, k])
     # and with the real junction budget (105 C) nothing is masked
-    names2, totals2 = rank_candidates(wl, 16, mac_budget=2**18)
+    names2, totals2 = _advise(wl, 16, mac_budget=2**18)
     assert names2[0] == "shard_K"
     assert np.array_equal(totals0, totals2)
 

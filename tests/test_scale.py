@@ -1,0 +1,289 @@
+"""Large-scale execution: device sharding, streaming, cache, resume.
+
+Covers the production-scale contract: ``evaluate(shard=..., stream=...)``
+and the Study chunk cache change performance characteristics ONLY —
+every result bit matches the plain single-pass path, including the
+degenerate grids (1-point, smaller than the device count, not divisible
+by the shard count).
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import REPO, run_multidevice
+from repro.core.cache import ResultCache, study_hash
+from repro.core.engine import DesignGrid, EvalResult, evaluate
+from repro.core.study import Study, StudyResult
+
+FIG7_GRID = dict(
+    workloads=[(64, 12100, 147), (512, 784, 128), (35, 2560, 4096)],
+    mac_budgets=(2**14, 2**16, 2**18),
+    tiers=range(1, 17),
+)
+
+
+def _assert_results_equal(a: EvalResult, b: EvalResult, ctx=""):
+    for f in dataclasses.fields(EvalResult):
+        if f.name == "grid":
+            continue
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        assert (va is None) == (vb is None), (ctx, f.name)
+        if va is not None:
+            assert np.array_equal(va, vb, equal_nan=True), (ctx, f.name)
+
+
+# ---------------------------------------------------------------------------
+# Streaming: point-blocks stitch back bit-for-bit
+# ---------------------------------------------------------------------------
+
+def test_stream_matches_unstreamed():
+    grid = DesignGrid.product(**FIG7_GRID)
+    full = evaluate(grid)
+    for block in (1, 5, 7, 48, 1000):
+        _assert_results_equal(full, evaluate(grid, stream=block), f"stream={block}")
+
+
+def test_subset_concat_roundtrip():
+    grid = DesignGrid.product(**FIG7_GRID)
+    full = evaluate(grid)
+    parts = [evaluate(grid.subset(lo, min(lo + 11, grid.n_points)))
+             for lo in range(0, grid.n_points, 11)]
+    _assert_results_equal(full, EvalResult.concat(grid, parts))
+
+
+def test_subset_of_heterogeneous_grid():
+    """Per-point dataflow/tech arrays slice with the points."""
+    P = 8
+    grid = DesignGrid(
+        workloads=[(64, 300, 64)],
+        tiers=np.arange(1, P + 1),
+        mac_budgets=np.full(P, 2**14),
+        dataflow=np.array(["dos", "ws"] * (P // 2)),
+        tech=np.array(["tsv", "miv"] * (P // 2)),
+    )
+    full = evaluate(grid)
+    _assert_results_equal(full, evaluate(grid, stream=3), "hetero")
+    sub = grid.subset(2, 5)
+    assert list(sub.dataflow) == list(grid.dataflow[2:5])
+    assert sub.n_points == 3
+
+
+# ---------------------------------------------------------------------------
+# Device sharding (single-device semantics + validation in-process)
+# ---------------------------------------------------------------------------
+
+def test_shard_validation():
+    grid = DesignGrid.product([(64, 300, 64)], (2**12,), (1, 2))
+    _assert_results_equal(evaluate(grid), evaluate(grid, shard="none"))
+    _assert_results_equal(evaluate(grid), evaluate(grid, shard=1))
+    # 'auto' is best-effort and portable: on the numpy backend (no
+    # device axis) it degrades to unsharded — never an error
+    _assert_results_equal(evaluate(grid), evaluate(grid, shard="auto"))
+    # an explicit count on the numpy backend is a hard error on EVERY
+    # host (not a silent no-op on machines that happen to have devices)
+    with pytest.raises(ValueError, match="backend='jax'"):
+        evaluate(grid, shard=2)
+    with pytest.raises(ValueError, match="shard"):
+        evaluate(grid, backend="jax", shard=0)
+    with pytest.raises(ValueError, match="shard"):
+        evaluate(grid, backend="jax", shard="bogus")
+    with pytest.raises(ValueError, match="device"):
+        evaluate(grid, backend="jax", shard=10_000)
+
+
+def test_sharded_matches_unsharded_multidevice():
+    """The satellite contract, on 8 fake CPU devices: the Fig-7 grid and
+    every degenerate shape (1-point, < device count, non-divisible)
+    match the unsharded path bit-for-bit under shard='auto' and explicit
+    shard counts."""
+    run_multidevice(
+        """
+        import numpy as np, jax, dataclasses
+        from repro.core.engine import DesignGrid, EvalResult, evaluate
+
+        assert jax.local_device_count() == 8
+
+        def check(grid, **kw):
+            a = evaluate(grid, backend="jax")
+            b = evaluate(grid, backend="jax", **kw)
+            for f in dataclasses.fields(EvalResult):
+                if f.name == "grid":
+                    continue
+                va, vb = getattr(a, f.name), getattr(b, f.name)
+                assert (va is None) == (vb is None), f.name
+                if va is not None:
+                    assert np.array_equal(va, vb, equal_nan=True), (f.name, kw)
+
+        # the Fig-7 grid (48 points = 6 per device)
+        fig7 = DesignGrid.product(
+            [(64, 12100, 147), (512, 784, 128)], (2**14, 2**16, 2**18),
+            range(1, 17),
+        )
+        check(fig7, shard="auto")
+        check(fig7, shard=3)           # 48 % 3 == 0 but != device count
+        check(fig7, shard=5)           # 48 % 5 != 0 -> padded shards
+        # degenerate grids
+        one = DesignGrid.product([(64, 12100, 147)], (2**16,), (3,))
+        check(one, shard="auto")       # 1 point on 8 devices
+        small = DesignGrid.product([(64, 12100, 147)], (2**16,), (1, 2, 3))
+        check(small, shard="auto")     # 3 points < 8 devices
+        odd = DesignGrid.product([(35, 2560, 4096)], (2**14, 2**18), range(1, 8))
+        check(odd, shard="auto")       # 14 points % 8 != 0
+        check(odd, shard=8)
+        # sharding composes with streaming
+        check(fig7, shard="auto", stream=7)
+        print("sharded-ok")
+        """,
+        n_devices=8,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache + resume
+# ---------------------------------------------------------------------------
+
+def _payload_json(res: StudyResult) -> str:
+    return json.dumps(res.to_dict()["payload"], sort_keys=True)
+
+
+@pytest.mark.parametrize("kind", ["evaluate", "pareto", "schedule", "advise", "sweep"])
+def test_cached_run_is_bit_identical(kind, tmp_path):
+    study = Study.example(kind)
+    plain = study.run()
+    cold = study.run(cache=ResultCache(tmp_path, block_cells=8))
+    warm = study.run(cache=ResultCache(tmp_path, block_cells=8))
+    assert cold.cache["hits"] == 0 and cold.cache["misses"] > 0
+    assert warm.cache["misses"] == 0
+    assert warm.cache["hits"] == cold.cache["misses"]
+    assert _payload_json(plain) == _payload_json(cold) == _payload_json(warm)
+    assert plain.cache is None  # uncached runs carry no counters
+
+
+def test_resume_recomputes_only_missing_chunks(tmp_path):
+    study = Study.example("evaluate")
+    plain = study.run()
+    cold = study.run(cache=ResultCache(tmp_path, block_cells=8))
+    n = cold.cache["misses"]
+    assert n >= 4  # the point of the test is multi-chunk resume
+    chunks = sorted((ResultCache(tmp_path).study_dir(study) / "chunks").glob("*.json"))
+    assert len(chunks) == n
+    for p in chunks[::2]:
+        p.unlink()
+    resumed = study.run(cache=ResultCache(tmp_path, block_cells=8))
+    assert resumed.cache["misses"] == len(chunks[::2])
+    assert resumed.cache["hits"] == n - len(chunks[::2])
+    assert _payload_json(plain) == _payload_json(resumed)
+
+
+def test_fig7_cache_chunks_over_workloads(tmp_path):
+    from repro.core.dse import fig7_study
+
+    study = fig7_study(n_workloads=40)
+    plain = study.run()
+    # 48 cells per workload -> 10-workload chunks -> 4 chunks
+    cold = study.run(cache=ResultCache(tmp_path, block_cells=480))
+    assert cold.cache["misses"] == 4
+    warm = study.run(cache=ResultCache(tmp_path, block_cells=480))
+    assert warm.cache == {**warm.cache, "hits": 4, "misses": 0}
+    assert _payload_json(plain) == _payload_json(cold) == _payload_json(warm)
+
+
+def test_spec_hash_keys_the_cache(tmp_path):
+    s1 = Study.example("evaluate")
+    s2 = dataclasses.replace(s1, name="renamed")  # cosmetic -> same hash
+    s3 = dataclasses.replace(
+        s1, constraints=dataclasses.replace(s1.constraints, thermal_limit_c=50.0)
+    )
+    assert study_hash(s1) == study_hash(s2)
+    assert study_hash(s1) != study_hash(s3)  # any real spec change invalidates
+    # execution knobs are result-invariant and must NOT invalidate: an
+    # interrupted unsharded numpy sweep can resume sharded on jax
+    s4 = dataclasses.replace(
+        s1, analysis=dataclasses.replace(s1.analysis, backend="jax",
+                                         shard="auto", chunk=64),
+    )
+    assert study_hash(s1) == study_hash(s4)
+    r1 = s1.run(cache=ResultCache(tmp_path))
+    r2 = s2.run(cache=ResultCache(tmp_path))  # renamed: full cache hit
+    assert r2.cache["misses"] == 0 and r2.cache["hits"] == r1.cache["misses"]
+    r3 = s3.run(cache=ResultCache(tmp_path))  # changed: fresh directory
+    assert r3.cache["hits"] == 0
+
+
+def test_artifact_echoes_cache_stats(tmp_path):
+    res = Study.example("evaluate").run(cache=ResultCache(tmp_path))
+    d = res.to_dict()
+    assert d["cache"]["misses"] >= 1
+    back = StudyResult.from_dict(json.loads(res.to_json()))
+    assert back.cache == res.cache
+    # truncated chunk files are recomputed, not trusted
+    study = Study.example("evaluate")
+    chunk = next((ResultCache(tmp_path).study_dir(study) / "chunks").glob("*.json"))
+    chunk.write_text("{not json")
+    again = study.run(cache=ResultCache(tmp_path))
+    assert again.cache["misses"] == 1
+    assert _payload_json(again) == _payload_json(res)
+
+
+def test_cli_cache_and_resume_roundtrip(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+
+    def cli(*args, **kw):
+        r = subprocess.run([sys.executable, "-m", "repro", *args],
+                           capture_output=True, text=True, cwd=tmp_path,
+                           env=env, **kw)
+        assert r.returncode == 0, r.stderr
+        return r
+
+    spec = Study.example("evaluate").to_json()
+    (tmp_path / "spec.json").write_text(spec)
+    first = cli("run", "spec.json", "--cache", "cachedir", "--out", "a.json")
+    assert "0 chunk(s) reused" in first.stderr
+    resumed = cli("run", "--resume", "cachedir", "--out", "b.json")
+    assert "0 computed" in resumed.stderr
+    a = json.loads((tmp_path / "a.json").read_text())
+    b = json.loads((tmp_path / "b.json").read_text())
+    assert a["payload"] == b["payload"]
+    # the cache directory layout is spec-hashed and self-describing
+    study_dirs = [p for p in (tmp_path / "cachedir").iterdir() if p.is_dir()]
+    assert len(study_dirs) == 1
+    assert (study_dirs[0] / "spec.json").is_file()
+    assert (study_dirs[0] / "result.json").is_file()
+    assert list((study_dirs[0] / "chunks").glob("*.json"))
+    # error paths: both spec and --resume / neither
+    r = subprocess.run(
+        [sys.executable, "-m", "repro", "run", "spec.json", "--resume", "cachedir"],
+        capture_output=True, text=True, cwd=tmp_path, env=env,
+    )
+    assert r.returncode != 0 and "not both" in r.stderr
+    r = subprocess.run(
+        [sys.executable, "-m", "repro", "run", "--resume", "cachedir",
+         "--cache", "other"],
+        capture_output=True, text=True, cwd=tmp_path, env=env,
+    )
+    assert r.returncode != 0 and "drop --cache" in r.stderr
+    r = subprocess.run(
+        [sys.executable, "-m", "repro", "run"],
+        capture_output=True, text=True, cwd=tmp_path, env=env,
+    )
+    assert r.returncode != 0
+
+
+def test_scale_bench_smoke_api(tmp_path):
+    """The benchmark's assertions (resume counters, bit-identity) run
+    as part of the suite at a tiny size."""
+    sys.path.insert(0, REPO)
+    try:
+        from benchmarks.scale_bench import run as bench_run
+    finally:
+        sys.path.pop(0)
+    out = bench_run(points=2000, keep_cache=str(tmp_path / "bench-cache"))
+    assert out["match"] and out["points"] >= 1900
+    assert out["chunks"] >= 2

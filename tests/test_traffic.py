@@ -1,0 +1,108 @@
+"""Kernel-aware HBM traffic model: mixed-family accounting consistency.
+
+Regression tests for the hybrid split: zamba2-style hybrids run an SSM
+backbone of ``n_layers`` blocks PLUS ``n_layers // attn_every``
+weight-shared attention+MLP applications. The traffic model must charge
+the SSM accounting for the backbone and the attention accounting (block
+activations, kernel qkv/o, decode kv cache) for exactly the attention
+applications — the seed model charged attention-kernel traffic for ALL
+``n_layers`` while dropping the attention block/cache terms entirely.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.analysis.traffic import traffic_bytes_per_device
+from repro.config import SHAPES
+from repro.configs import REGISTRY
+
+MODES = ["train_4k", "prefill_32k", "decode_32k"]
+KW = dict(n_chips=256, model_ax=16, microbatches=4)
+N_PARAMS = 1_000_000_000  # held fixed: weight traffic is an argument
+
+
+@pytest.fixture(scope="module")
+def hybrid():
+    cfg = REGISTRY["zamba2-2.7b"]
+    assert cfg.family == "hybrid" and cfg.attn_every > 0
+    return cfg
+
+
+@pytest.mark.parametrize("shape", MODES)
+def test_hybrid_ssm_endpoint(hybrid, shape):
+    """With no attention applications a hybrid is exactly an SSM."""
+    hyb0 = dataclasses.replace(hybrid, attn_every=0)
+    ssm = dataclasses.replace(hyb0, family="ssm")
+    a = traffic_bytes_per_device(hyb0, SHAPES[shape], N_PARAMS, **KW)
+    b = traffic_bytes_per_device(ssm, SHAPES[shape], N_PARAMS, **KW)
+    assert a == pytest.approx(b, rel=1e-12)
+
+
+@pytest.mark.parametrize("shape", MODES)
+def test_hybrid_dense_endpoint(hybrid, shape):
+    """The attention component of a hybrid equals the dense per-layer
+    accounting: adding n_attn attention applications to the backbone
+    moves the total by exactly what n_attn dense layers cost."""
+    n_attn = hybrid.n_layers // hybrid.attn_every
+    assert n_attn > 0
+    hyb0 = dataclasses.replace(hybrid, attn_every=0)
+    dense_kw = dict(family="dense", attn_every=0, ssm_state=0)
+    dense_n = dataclasses.replace(hybrid, n_layers=n_attn, **dense_kw)
+    dense_0 = dataclasses.replace(hybrid, n_layers=0, **dense_kw)
+    sh = SHAPES[shape]
+    d_hybrid = (
+        traffic_bytes_per_device(hybrid, sh, N_PARAMS, **KW)
+        - traffic_bytes_per_device(hyb0, sh, N_PARAMS, **KW)
+    )
+    d_dense = (
+        traffic_bytes_per_device(dense_n, sh, N_PARAMS, **KW)
+        - traffic_bytes_per_device(dense_0, sh, N_PARAMS, **KW)
+    )
+    assert d_hybrid == pytest.approx(d_dense, rel=1e-9)
+    assert d_hybrid > 0  # the attention component actually counts
+
+
+def test_hybrid_attention_scales_with_attn_every(hybrid):
+    """More attention applications -> strictly more traffic, and the
+    kernel component is proportional to n_layers // attn_every (the
+    seed bug charged it for all n_layers regardless)."""
+    sh = SHAPES["decode_32k"]
+    t0 = traffic_bytes_per_device(
+        dataclasses.replace(hybrid, attn_every=0), sh, N_PARAMS, **KW
+    )
+    t6 = traffic_bytes_per_device(
+        dataclasses.replace(hybrid, attn_every=6), sh, N_PARAMS, **KW
+    )
+    t3 = traffic_bytes_per_device(
+        dataclasses.replace(hybrid, attn_every=3), sh, N_PARAMS, **KW
+    )
+    assert t0 < t6 < t3
+    n6 = hybrid.n_layers // 6
+    n3 = hybrid.n_layers // 3
+    assert (t3 - t0) / (t6 - t0) == pytest.approx(n3 / n6, rel=1e-9)
+
+
+def test_non_hybrid_families_unchanged_structure():
+    """Dense/MoE: attention accounting covers all layers; SSM: none.
+    (Guards the refactored split against regressions for the families
+    whose numbers the seed model already had right.)"""
+    sh = SHAPES["decode_32k"]
+    dense = REGISTRY["qwen2.5-3b"]
+    # halving the layers halves the layer-proportional part
+    half = dataclasses.replace(dense, n_layers=dense.n_layers // 2)
+    t_full = traffic_bytes_per_device(dense, sh, N_PARAMS, **KW)
+    t_half = traffic_bytes_per_device(half, sh, N_PARAMS, **KW)
+    zero = dataclasses.replace(dense, n_layers=0)
+    t_zero = traffic_bytes_per_device(zero, sh, N_PARAMS, **KW)
+    assert (t_full - t_zero) == pytest.approx(2 * (t_half - t_zero), rel=1e-9)
+    # xlstm (family ssm) must carry no attention-kernel/cache term:
+    # the per-layer traffic is independent of the attention head count
+    ssm = REGISTRY["xlstm-125m"]
+    assert ssm.family == "ssm"
+    more_heads = dataclasses.replace(ssm, n_kv_heads=ssm.n_heads)
+    assert traffic_bytes_per_device(
+        ssm, sh, N_PARAMS, **KW
+    ) == pytest.approx(
+        traffic_bytes_per_device(more_heads, sh, N_PARAMS, **KW), rel=1e-12
+    )
