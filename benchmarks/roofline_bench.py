@@ -1,80 +1,142 @@
-"""Roofline table from the dry-run artifacts (§Roofline source of truth).
+"""Benchmark the engine-backed bandwidth/roofline model (§Roofline).
 
-Reads experiments/dryrun/*.json (written by repro.launch.dryrun), emits
-one row per (arch x shape) single-pod cell with the three terms, the
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPs and MFU — and writes the
-markdown table EXPERIMENTS.md embeds.
+Runs one declarative ``roofline`` Study — N random Fig-7-style
+workloads x 3 MAC budgets x 16 tier counts under
+``BandwidthSpec.paper_default()`` — and checks it against two
+independent references:
+
+  - scalar identity: for a sample of design points, the batched
+    ``gemm_traffic_batched`` + ``roofline_cycles`` pipeline is
+    recomputed point-by-point (batch of one) and must agree exactly;
+  - uncapped identity: the same study with an unbounded spec must be
+    bit-for-bit equal to the plain compute-bound ``evaluate`` — the
+    contract that keeps every pre-bandwidth result valid.
+
+Prints the points/s throughput and bound histogram, and writes
+``BENCH_roofline.json`` next to this file. The TPU dry-run artifact
+table this benchmark used to print now lives in
+``experiments/make_report.py`` (``python -m repro report``).
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline_bench [--n 300] [--smoke]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
+import time
 
-ART_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
-OUT_MD = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "roofline_table.md"
+import numpy as np
+
+from repro.core.bandwidth import BandwidthSpec, gemm_traffic_batched, roofline_cycles
+from repro.core.dse import random_workloads
+from repro.core.engine import DesignGrid, evaluate
+from repro.core.study import AnalysisSpec, SpaceSpec, Study, WorkloadSpec
+
+HERE = pathlib.Path(__file__).resolve().parent
+BUDGETS = (2**14, 2**16, 2**18)
+MAX_TIERS = 16
 
 
-def load_artifacts(mesh="pod16x16", strategy=None):
-    rows = []
-    for p in sorted(ART_DIR.glob("*.json")):
-        a = json.loads(p.read_text())
-        if a.get("mesh") != mesh or "error" in a:
+def _scalar_check(res, grid, spec: BandwidthSpec, n_sample: int = 64) -> None:
+    """Recompute a sample of points one at a time; must match exactly."""
+    rng = np.random.default_rng(0)
+    W, P = res.valid.shape
+    for _ in range(n_sample):
+        w, p = int(rng.integers(W)), int(rng.integers(P))
+        if not res.valid[w, p]:
             continue
-        if strategy and a.get("strategy") != strategy:
-            continue
-        rows.append(a)
-    return rows
+        M, K, N = (int(x) for x in grid.workloads[w])
+        tr = gemm_traffic_batched(
+            "dos", [M], [K], [N], [int(res.rows[w, p])], [int(res.cols[w, p])],
+            [int(grid.tiers[p])], np.asarray(["tsv"]), spec,
+        )
+        assert tr["dram_bytes"][0] == res.dram_bytes[w, p], (w, p)
+        compute = res.cycles[w, p] - res.stall_cycles[w, p]
+        total, stall, _ = roofline_cycles(
+            [compute], tr["dram_bytes"] / spec.dram_bytes_per_cycle,
+            tr["vlink_cycles"],
+        )
+        assert total[0] == res.cycles[w, p], (w, p)
+        assert stall[0] == res.stall_cycles[w, p], (w, p)
 
 
-def table_rows(arts):
-    out = []
-    for a in arts:
-        r = a["roofline"]
-        out.append({
-            "arch": a["arch"], "shape": a["shape"], "strategy": a["strategy"],
-            "mem_gb": a["memory"]["peak_per_device_gb"],
-            "compute_ms": r["compute_s"] * 1e3,
-            "memory_ms": (r.get("memory_s_kernel") or r["memory_s"]) * 1e3,
-            "hlo_memory_ms": r["memory_s"] * 1e3,
-            "collective_ms": r["collective_s"] * 1e3,
-            "dominant": r["dominant"],
-            "step_ms": r["step_s"] * 1e3,
-            "useful": r["useful_ratio"],
-            "mfu": r["mfu"],
-        })
-    return out
+def run(n_workloads: int = 300, seed: int = 0):
+    spec = BandwidthSpec.paper_default()
+    study = Study(
+        name=f"roofline-bench-{n_workloads}",
+        workload=WorkloadSpec(kind="random", n=n_workloads, seed=seed),
+        space=SpaceSpec(mac_budgets=BUDGETS, tiers=tuple(range(1, MAX_TIERS + 1))),
+        analysis=AnalysisSpec(kind="roofline", bandwidth=spec),
+    )
+    t0 = time.perf_counter()
+    out_study = study.run()
+    bw_s = time.perf_counter() - t0
+    res = out_study.result
+    grid = res.grid
+
+    _scalar_check(res, grid, spec)
+
+    # Uncapped bit-identity vs the plain compute-bound evaluate.
+    wl = random_workloads(n_workloads, seed)
+    plain = evaluate(DesignGrid.product(wl, BUDGETS, range(1, MAX_TIERS + 1)))
+    unb = evaluate(
+        DesignGrid.product(wl, BUDGETS, range(1, MAX_TIERS + 1)),
+        bandwidth=BandwidthSpec(),
+    )
+    assert np.array_equal(plain.cycles, unb.cycles)
+    assert np.array_equal(plain.speedup, unb.speedup, equal_nan=True)
+    assert float(np.nansum(unb.stall_cycles)) == 0.0
+
+    points = n_workloads * len(BUDGETS) * MAX_TIERS
+    return {
+        "sweep": f"{n_workloads} workloads x {len(BUDGETS)} budgets x {MAX_TIERS} tiers",
+        "points": points,
+        "bandwidth": spec.to_dict(),
+        "roofline_s": bw_s,
+        "points_per_s": points / bw_s,
+        "bound_counts": out_study.payload["bound_counts"],
+        "stall_frac": out_study.payload["stall_frac"],
+        "speedup_max_compute": float(np.nanmax(plain.speedup)),
+        "speedup_max_bw": float(np.nanmax(res.speedup)),
+        "scalar_match": True,
+        "uncapped_identity": True,
+    }
 
 
 def bench_roofline():
-    arts = load_artifacts()
-    if not arts:
-        return [("roofline/no_artifacts", 0.0,
-                 "run: python -m repro.launch.dryrun --both-meshes")]
-    rows = table_rows(arts)
-    md = [
-        "| arch | shape | strat | GB/dev | compute ms | memory ms (kernel) | collective ms | dominant | step ms | MODEL/HLO | MFU |",
-        "|---|---|---|---|---|---|---|---|---|---|---|",
+    """benchmarks.run entry: small engine-backed roofline summary rows."""
+    out = run(40)
+    us = out["roofline_s"] * 1e6
+    return [
+        ("roofline/engine_sweep", us,
+         f"{out['points']} pts; bounds {out['bound_counts']}; "
+         f"stall {out['stall_frac']:.2f}"),
+        ("roofline/speedup_collapse", 0.0,
+         f"compute-bound {out['speedup_max_compute']:.2f}x -> "
+         f"bw-aware {out['speedup_max_bw']:.2f}x"),
     ]
-    out = []
-    for r in rows:
-        md.append(
-            f"| {r['arch']} | {r['shape']} | {r['strategy']} | {r['mem_gb']:.1f} "
-            f"| {r['compute_ms']:.2f} | {r['memory_ms']:.2f} | {r['collective_ms']:.2f} "
-            f"| {r['dominant']} | {r['step_ms']:.2f} | {r['useful']:.2f} | {r['mfu']*100:.1f}% |"
-        )
-        out.append((
-            f"roofline/{r['arch']}/{r['shape']}/{r['strategy']}",
-            r["step_ms"] * 1e3,
-            f"{r['dominant']}-bound mfu={r['mfu']*100:.1f}%",
-        ))
-    OUT_MD.write_text("\n".join(md) + "\n")
-    dom = {}
-    for r in rows:
-        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
-    out.append(("roofline/summary", 0.0,
-                f"{len(rows)} cells; bottlenecks: {dom}; table -> {OUT_MD.name}"))
-    return out
 
 
 ALL = [bench_roofline]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=300, help="number of workloads")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep (40 workloads) — the CI smoke step")
+    args = ap.parse_args()
+    out = run(40 if args.smoke else args.n, args.seed)
+    name = "BENCH_roofline_smoke.json" if args.smoke else "BENCH_roofline.json"
+    (HERE / name).write_text(json.dumps(out, indent=1))
+    print(json.dumps(out, indent=1))
+    print(f"points/s: {out['points_per_s']:.0f}  "
+          f"speedup collapse: {out['speedup_max_compute']:.2f}x -> "
+          f"{out['speedup_max_bw']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,9 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   - eqs/fig5/fig6/fig7/tab1: analytical model + DSE reproductions
   - tab2/fig8/fig9: PPA model reproductions
   - kernels/*: op microbenchmarks (CPU wall time)
-  - roofline/*: the (arch x shape) table from dry-run artifacts
+  - roofline/*: the engine-backed bandwidth/roofline sweep
+    (benchmarks.roofline_bench; the dry-run artifact table moved to
+    ``python -m repro report``)
 """
 
 from __future__ import annotations

@@ -64,7 +64,8 @@ def main():
         print(f"\n== {cfg.name} / {shape_name} ({stream.mode}) — "
               f"{stream.workloads.shape[0]} unique GEMMs, "
               f"{stream.n_gemm_invocations} invocations, "
-              f"{stream.total_macs:.3e} MACs")
+              f"{stream.total_macs:.3e} MACs, "
+              f"{stream.arithmetic_intensity():.1f} MACs/DRAM-byte")
         if args.stream:
             for g in stream.gemms:
                 print(f"   {g.name:16s} M={g.M:<7d} K={g.K:<7d} N={g.N:<7d} "

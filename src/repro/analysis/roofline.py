@@ -28,9 +28,17 @@ from __future__ import annotations
 import dataclasses
 import re
 
+import numpy as np
+
 from ..core.ppa import constants as HW
 
-__all__ = ["CollectiveStats", "parse_collectives", "Roofline", "roofline_from_artifact"]
+__all__ = [
+    "CollectiveStats",
+    "parse_collectives",
+    "Roofline",
+    "roofline_from_artifact",
+    "roofline_terms_batched",
+]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
@@ -111,6 +119,53 @@ def _group_size(line: str) -> int:
     return 2  # unknown grouping: assume a pair (conservative-low)
 
 
+def roofline_terms_batched(
+    compute_s,
+    memory_s,
+    collective_s,
+    memory_s_kernel=0.0,
+):
+    """Batched three-term artifact roofline — the one combiner.
+
+    Vectorized over broadcastable per-cell term arrays [seconds].
+    Returns a dict of arrays: ``step_s`` (max(compute, effective
+    memory) + collective — compute/memory overlap on TPU, the
+    collective is the paper-faithful serialized adder pile),
+    ``stall_s`` (step minus compute: time the MXUs are not the
+    bottleneck), and ``dominant`` ('compute' | 'memory' | 'collective',
+    ties toward the earlier name). ``memory_s_kernel`` > 0 overrides
+    ``memory_s`` per cell (Pallas kernels keep flash/SSD blocks in
+    VMEM; the jnp-fallback HLO overstates those bytes).
+
+    The scalar ``Roofline`` properties are batch-of-one wrappers over
+    this function, so per-artifact and batched tables can never drift
+    (regression-pinned on the parse fixtures) — the same
+    scalar-wraps-batched contract as ``core.engine`` /
+    ``core.bandwidth.roofline_cycles``, which applies the overlapped
+    max to engine cycles instead of artifact seconds.
+    """
+    compute, mem, mem_k, coll = np.broadcast_arrays(
+        *(np.asarray(x, dtype=np.float64)
+          for x in (compute_s, memory_s, memory_s_kernel, collective_s))
+    )
+    mem_eff = np.where(mem_k > 0, mem_k, mem)
+    step = np.maximum(compute, mem_eff) + coll
+    names = np.asarray(("compute", "memory", "collective"))
+    dominant = names[
+        np.where(
+            coll > np.maximum(compute, mem_eff),
+            2,
+            np.where(mem_eff > compute, 1, 0),
+        )
+    ]
+    return {
+        "memory_s_effective": mem_eff,
+        "step_s": step,
+        "stall_s": step - compute,
+        "dominant": dominant,
+    }
+
+
 @dataclasses.dataclass
 class Roofline:
     arch: str
@@ -129,21 +184,22 @@ class Roofline:
     # blocks in VMEM; the jnp-fallback HLO overstates those bytes).
     memory_s_kernel: float = 0.0
 
+    def _terms(self) -> dict:
+        """Batch-of-one delegation to ``roofline_terms_batched``."""
+        return roofline_terms_batched(
+            self.compute_s, self.memory_s, self.collective_s,
+            self.memory_s_kernel,
+        )
+
     @property
     def dominant(self) -> str:
-        terms = {
-            "compute": self.compute_s,
-            "memory": self.memory_s_kernel or self.memory_s,
-            "collective": self.collective_s,
-        }
-        return max(terms, key=terms.get)
+        return str(np.asarray(self._terms()["dominant"]).reshape(-1)[0])
 
     @property
     def step_s(self) -> float:
         """Pessimistic step estimate: max(compute, kernel-true memory)
         + collective (the paper-faithful sequential adder pile)."""
-        mem = self.memory_s_kernel or self.memory_s
-        return max(self.compute_s, mem) + self.collective_s
+        return float(np.asarray(self._terms()["step_s"]).reshape(-1)[0])
 
     @property
     def useful_ratio(self) -> float:

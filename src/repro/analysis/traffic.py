@@ -24,10 +24,30 @@ logits:  bf16 write + f32 softmax r/w on the vocab shard.
 from __future__ import annotations
 
 from ..config import ArchConfig, ShapeConfig
+from ..core.ppa import constants as HW
 
-__all__ = ["traffic_bytes_per_device"]
+__all__ = ["hbm_seconds_per_device", "traffic_bytes_per_device"]
 
 _B2, _B4 = 2, 4
+
+
+def hbm_seconds_per_device(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    n_params: int,
+    *,
+    hbm_bw: float = HW.TPU_HBM_BW,
+    **kw,
+) -> float:
+    """Kernel-true HBM service time [s] of one step on one device.
+
+    ``traffic_bytes_per_device(...) / hbm_bw`` — the memory term the
+    roofline combiner (``analysis.roofline.roofline_terms_batched``)
+    consumes as ``memory_s_kernel``; ``hbm_bw`` is bytes/s (default:
+    the v5e HBM model). Keyword args pass through to
+    ``traffic_bytes_per_device``.
+    """
+    return traffic_bytes_per_device(cfg, shape, n_params, **kw) / hbm_bw
 
 
 def traffic_bytes_per_device(

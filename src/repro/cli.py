@@ -11,8 +11,9 @@ Subcommands:
   chunks and computing only the missing ones — the recovery path for
   interrupted large-scale sweeps.
 - ``example-spec <kind>``: print a small runnable template spec for any
-  analysis kind (evaluate | schedule | pareto | advise | sweep) —
-  ``python -m repro example-spec evaluate > spec.json`` then ``run`` it.
+  analysis kind (evaluate | schedule | pareto | advise | sweep |
+  roofline) — ``python -m repro example-spec evaluate > spec.json``
+  then ``run`` it.
 - ``report``: regenerate the ``experiments/`` report sections (the DSE
   and network tables are recomputed live through Study specs).
 - ``bench``: run the repo benchmarks (``--smoke`` for the CI subset);
@@ -37,7 +38,7 @@ import sys
 from .core.cache import DEFAULT_CACHE_DIR, ResultCache
 from .core.study import ANALYSIS_KINDS, Study
 
-_BENCHES = ("dse", "network", "study", "scale")
+_BENCHES = ("dse", "network", "study", "scale", "roofline")
 
 
 def _find_repo_root() -> pathlib.Path:

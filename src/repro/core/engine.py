@@ -47,6 +47,13 @@ from .analytical import (
     _square_rc,
     dataflow_dims,
 )
+from .bandwidth import (
+    BOUND_NAMES,
+    BandwidthSpec,
+    bound_names,
+    gemm_traffic_batched,
+    roofline_cycles,
+)
 from .dataflow import activity_batched
 from .params import (
     VALID_BACKENDS,
@@ -63,6 +70,7 @@ from .ppa.power import array_power_batched
 from .ppa.thermal import lumped_tier_temps
 
 __all__ = [
+    "BandwidthSpec",
     "DesignGrid",
     "EvalResult",
     "NetworkReport",
@@ -115,10 +123,12 @@ def _as_1d_int(x) -> np.ndarray:
 class DesignGrid:
     """A batch of GEMM workloads crossed with a batch of design points.
 
-    ``workloads`` is (W, 3) int64 — rows of (M, K, N). Design points are
-    parallel (P,) arrays: either ``mac_budgets`` (the engine optimizes
-    the per-tier (R, C) shape under ``mac_budgets // tiers``, the
-    paper's Sec. IV-A rounding) or explicit ``rows``/``cols``.
+    ``workloads`` is (W, 3) int64 — rows of (M, K, N), the GEMM
+    ``A(M x K) @ B(K x N)`` dimensions [elements]. Design points are
+    parallel (P,) arrays: either ``mac_budgets`` [MAC units] (the
+    engine optimizes the per-tier (R, C) shape under ``mac_budgets //
+    tiers``, the paper's Sec. IV-A rounding) or explicit
+    ``rows``/``cols`` [MACs per tier edge].
     ``dataflow`` is 'os' | 'ws' | 'is' | 'dos' — one string for the
     whole grid or a (P,) array ('os' is dOS at any tier count's l=1
     formulaic limit; at tiers > 1 'os' is treated as dOS). ``tech`` is
@@ -241,11 +251,29 @@ class DesignGrid:
 class EvalResult:
     """Stacked evaluation results; every array is (W, P) float64/int64.
 
+    Units, per field: ``rows``/``cols`` are per-tier array dimensions
+    [MACs]; ``cycles``/``cycles_2d``/``stall_cycles``/``mem_cycles``/
+    ``vlink_cycles`` are clock cycles at the model's 1 GHz
+    (``ppa.constants.FREQ_HZ``); ``area_um2``/``footprint_um2`` are
+    silicon area [um^2]; ``power_w`` family is watts [W]; ``energy_j``
+    is joules [J]; ``edp_js`` is the energy-delay product [J*s];
+    ``t_max_c`` is the hottest tier's steady-state temperature [degC];
+    ``dram_bytes``/``vlink_bytes``/``sram_need_bytes`` are bytes;
+    ``speedup``/``utilization``/activity fields are dimensionless.
+
     ``cycles`` / ``cycles_2d`` are float64 (np.inf marks invalid design
     points, e.g. per-tier budget < 1); ``speedup = cycles_2d / cycles``
     against the budget-matched optimized 2D baseline of the same
     dataflow family. Metric groups not requested from ``evaluate()``
     are None.
+
+    The bandwidth group (``stall_cycles`` ... ``within_sram_capacity``)
+    is present iff ``evaluate()`` ran with a ``bandwidth=`` spec; then
+    ``cycles``/``cycles_2d`` are the bandwidth-aware roofline totals
+    (``cycles = compute + stall_cycles``) and ``bound`` classifies each
+    point as ``'compute' | 'memory' | 'vlink'``. With an unbounded spec
+    the group is all-zero/'compute' and every other field is bit-for-bit
+    identical to the bandwidth-oblivious result.
     """
 
     grid: DesignGrid
@@ -270,23 +298,38 @@ class EvalResult:
     edp_js: np.ndarray | None = None
     t_max_c: np.ndarray | None = None
     within_thermal_budget: np.ndarray | None = None
+    #: bandwidth group — set iff evaluate() ran with a bandwidth spec.
+    stall_cycles: np.ndarray | None = None
+    bound: np.ndarray | None = None
+    mem_cycles: np.ndarray | None = None
+    vlink_cycles: np.ndarray | None = None
+    dram_bytes: np.ndarray | None = None
+    vlink_bytes: np.ndarray | None = None
+    sram_need_bytes: np.ndarray | None = None
+    within_sram_capacity: np.ndarray | None = None
 
     @property
     def feasible(self) -> np.ndarray:
-        """(W, P) bool — valid AND within the thermal budget.
+        """(W, P) bool — valid AND within every evaluated capacity.
 
         The first-class feasibility mask: optima (``pareto_mask``,
         ``schedule``, the advisor's design ranking) exclude points that
-        are structurally invalid or would exceed the junction limit.
-        Falls back to ``valid`` when thermal was not evaluated.
+        are structurally invalid, would exceed the junction limit
+        [degC], or whose minimal SRAM working set [bytes] does not fit
+        the per-tier capacity (bandwidth-aware runs). Masks that were
+        not evaluated are skipped.
         """
-        if self.within_thermal_budget is None:
-            return self.valid
-        return self.valid & self.within_thermal_budget
+        m = self.valid
+        if self.within_thermal_budget is not None:
+            m = m & self.within_thermal_budget
+        if self.within_sram_capacity is not None:
+            m = m & self.within_sram_capacity
+        return m
 
     #: dtypes restored by ``from_dict`` (everything else is float64).
     _INT_FIELDS = ("rows", "cols")
-    _BOOL_FIELDS = ("valid", "within_thermal_budget")
+    _BOOL_FIELDS = ("valid", "within_thermal_budget", "within_sram_capacity")
+    _STR_FIELDS = ("bound",)
 
     def to_dict(self) -> dict:
         """Array fields as a plain dict (None entries dropped), plus the
@@ -314,6 +357,8 @@ class EvalResult:
                 dt = np.int64
             elif f.name in cls._BOOL_FIELDS:
                 dt = bool
+            elif f.name in cls._STR_FIELDS:
+                dt = np.str_
             else:
                 dt = np.float64
             kw[f.name] = np.asarray(d[f.name], dtype=dt)
@@ -561,6 +606,7 @@ def evaluate(
     thermal_limit: float = C.THERMAL_BUDGET_C,
     shard: int | str | None = None,
     stream: int | None = None,
+    bandwidth: BandwidthSpec | dict | None = None,
 ) -> EvalResult:
     """Evaluate every (workload, design point) pair of the grid at once.
 
@@ -568,8 +614,21 @@ def evaluate(
     'area', 'power', 'thermal' (thermal implies power implies area).
     ``chunk`` bounds the working-set of the (B, R_max) search
     intermediates; results are independent of it. ``thermal_limit``
-    sets the junction temperature [C] behind
+    sets the junction temperature [degC] behind
     ``within_thermal_budget`` / ``feasible``.
+
+    ``bandwidth`` (a ``core.bandwidth.BandwidthSpec`` or its dict form)
+    turns on the bandwidth-aware runtime model: DRAM traffic [bytes]
+    under the SRAM-capacity reuse model, vertical-link (TSV vs MIV)
+    service time [cycles], and the overlapped roofline ``cycles =
+    max(compute, memory, vlink)`` — with ``stall_cycles``, the
+    ``bound`` classification and the SRAM feasibility mask added to
+    the result (see ``EvalResult``). The 2D baseline behind
+    ``speedup`` is bandwidth-adjusted with the same spec (its own
+    searched shape, tech '2d': no vertical links). ``None`` (default)
+    and an unbounded spec are bit-for-bit identical to the plain
+    evaluation. The (R, C) shape search itself stays compute-optimal —
+    stalls are charged to the chosen design, not re-searched.
 
     ``shard``: ``'auto'`` splits the (R, C) search across the host's
     JAX devices (jax backend; ``parallel.shard_eval``); an int requests
@@ -579,7 +638,7 @@ def evaluate(
     ``EvalResult.concat`` so peak memory stays bounded at any grid
     size. By default grids past ~4M result cells stream automatically.
     Neither knob changes a single result bit (the search is rowwise
-    independent; regression-pinned).
+    independent; regression-pinned); both compose with ``bandwidth``.
     """
     validate_option("backend", backend, VALID_BACKENDS)
     metrics = {validate_option("metric", m, VALID_METRICS) for m in metrics}
@@ -588,6 +647,8 @@ def evaluate(
     if "power" in metrics:
         metrics.add("area")
     n_shards = _resolve_shards(shard, backend)
+    if bandwidth is not None and not isinstance(bandwidth, BandwidthSpec):
+        bandwidth = BandwidthSpec.from_dict(bandwidth)
 
     W, P = grid.n_workloads, grid.n_points
     if stream is None:
@@ -600,12 +661,14 @@ def evaluate(
         parts = [
             _evaluate_block(
                 grid.subset(lo, min(lo + block, P)), backend, metrics, chunk,
-                thermal_limit, n_shards,
+                thermal_limit, n_shards, bandwidth,
             )
             for lo in range(0, P, block)
         ]
         return EvalResult.concat(grid, parts)
-    return _evaluate_block(grid, backend, metrics, chunk, thermal_limit, n_shards)
+    return _evaluate_block(
+        grid, backend, metrics, chunk, thermal_limit, n_shards, bandwidth
+    )
 
 
 def _evaluate_block(
@@ -615,6 +678,7 @@ def _evaluate_block(
     chunk: int,
     thermal_limit: float,
     n_shards: int = 1,
+    bandwidth: BandwidthSpec | None = None,
 ) -> EvalResult:
     """One unstreamed evaluation pass (metrics already resolved)."""
     W, P = grid.n_workloads, grid.n_points
@@ -643,6 +707,8 @@ def _evaluate_block(
     cols = np.empty(W * P, dtype=np.int64)
     cyc = np.full(W * P, INVALID_CYCLES, dtype=np.int64)
     cyc2d = np.full(W * P, INVALID_CYCLES, dtype=np.int64)
+    rows2d = np.ones(W * P, dtype=np.int64)
+    cols2d = np.ones(W * P, dtype=np.int64)
 
     for df in np.unique(dff):
         sel = np.nonzero(dff == df)[0]
@@ -663,18 +729,70 @@ def _evaluate_block(
         # is constant across tier counts.
         key = np.stack([M_, K_, N_, b_], axis=1)
         uniq, inv = np.unique(key, axis=0, return_inverse=True)
-        _, _, t2 = _optimize_flat(
+        r2, c2, t2 = _optimize_flat(
             uniq[:, 0], uniq[:, 1], uniq[:, 2], uniq[:, 3],
             np.ones(len(uniq), dtype=np.int64), str(df), grid.mode,
             backend, chunk, n_shards,
         )
         cyc2d[sel] = t2[inv]
+        rows2d[sel], cols2d[sel] = r2[inv], c2[inv]
 
     valid = cyc != INVALID_CYCLES
     cycles = np.where(valid, cyc, 0).astype(np.float64)
     cycles[~valid] = np.inf
     cycles_2d = np.where(cyc2d != INVALID_CYCLES, cyc2d, 0).astype(np.float64)
     cycles_2d[cyc2d == INVALID_CYCLES] = np.inf
+
+    # --- bandwidth-aware roofline (tentpole): DRAM / SRAM / vlink -----
+    # Applied to the compute-optimal shapes found above; an unbounded
+    # spec yields zero stalls and leaves every downstream value
+    # bit-for-bit unchanged (max(compute, 0, 0) == compute; + 0.0 is
+    # exact), which is what makes bandwidth=None and an uncapped spec
+    # regression-identical.
+    bw_fields: dict = {}
+    stall_flat = None
+    if bandwidth is not None:
+        mem_cyc = np.zeros(W * P)
+        vl_cyc = np.zeros(W * P)
+        dram_b = np.zeros(W * P)
+        vl_b = np.zeros(W * P)
+        sram_need = np.zeros(W * P)
+        mem_cyc2 = np.zeros(W * P)
+        bpc = bandwidth.dram_bytes_per_cycle
+        tech2d = np.full(W * P, "2d")
+        ones = np.ones(W * P, dtype=np.int64)
+        for df in np.unique(dff):
+            sel = np.nonzero(dff == df)[0]
+            tr = gemm_traffic_batched(
+                str(df), Mf[sel], Kf[sel], Nf[sel],
+                rows[sel], cols[sel], Lf[sel], techf[sel], bandwidth,
+            )
+            dram_b[sel] = tr["dram_bytes"]
+            vl_b[sel] = tr["vlink_bytes"]
+            vl_cyc[sel] = tr["vlink_cycles"]
+            sram_need[sel] = tr["sram_need_bytes"]
+            mem_cyc[sel] = tr["dram_bytes"] / bpc
+            # Budget-matched 2D baseline under the same memory system
+            # (its own searched shape; tech '2d' has no vertical links).
+            tr2 = gemm_traffic_batched(
+                str(df), Mf[sel], Kf[sel], Nf[sel],
+                rows2d[sel], cols2d[sel], ones[sel], tech2d[sel], bandwidth,
+            )
+            mem_cyc2[sel] = tr2["dram_bytes"] / bpc
+        cycles, stall_flat, bidx = roofline_cycles(cycles, mem_cyc, vl_cyc)
+        stall_flat = np.where(valid, stall_flat, np.nan)
+        cycles_2d = np.maximum(cycles_2d, mem_cyc2)
+        bw_fields = dict(
+            stall_cycles=stall_flat.reshape(W, P),
+            bound=bound_names(bidx).reshape(W, P),
+            mem_cycles=mem_cyc.reshape(W, P),
+            vlink_cycles=vl_cyc.reshape(W, P),
+            dram_bytes=dram_b.reshape(W, P),
+            vlink_bytes=vl_b.reshape(W, P),
+            sram_need_bytes=sram_need.reshape(W, P),
+            within_sram_capacity=(sram_need <= bandwidth.sram_bytes).reshape(W, P),
+        )
+
     with np.errstate(invalid="ignore", divide="ignore"):
         speedup = np.where(valid, cycles_2d / cycles, np.nan)
         n_used = rows * cols * Lf
@@ -690,6 +808,7 @@ def _evaluate_block(
         speedup=speedup.reshape(W, P),
         utilization=utilization.reshape(W, P),
         valid=valid.reshape(W, P),
+        **bw_fields,
     )
 
     act = None
@@ -736,16 +855,33 @@ def _evaluate_block(
                 pw.setdefault(k, np.zeros(W * P))[sel] = v
         t_s = np.where(valid, pw["cycles"] / C.FREQ_HZ, np.nan)
         energy = pw["total_w"] * t_s
+        t_total = t_s
+        power_avg = pw["total_w"]
+        if stall_flat is not None:
+            # Stall cycles burn static power only (the MAC/link activity
+            # waits with the array); energy = full power over the
+            # compute phase + static power over the stall. Exact when
+            # stall == 0: + static * 0.0 adds nothing, preserving the
+            # uncapped bit-identity.
+            t_stall = np.where(valid, stall_flat, 0.0) / C.FREQ_HZ
+            energy = energy + pw["static_w"] * t_stall
+            t_total = t_s + t_stall
+            with np.errstate(invalid="ignore", divide="ignore"):
+                power_avg = np.where(t_stall > 0, energy / t_total, pw["total_w"])
         res.update(
-            power_w=np.where(valid, pw["total_w"], np.nan).reshape(W, P),
+            power_w=np.where(valid, power_avg, np.nan).reshape(W, P),
             peak_power_w=np.where(valid, pw["peak_w"], np.nan).reshape(W, P),
             static_power_w=np.where(valid, pw["static_w"], np.nan).reshape(W, P),
             dynamic_power_w=np.where(valid, pw["dynamic_w"], np.nan).reshape(W, P),
             energy_j=energy.reshape(W, P),
-            edp_js=(energy * t_s).reshape(W, P),
+            edp_js=(energy * t_total).reshape(W, P),
         )
 
     if "thermal" in metrics:
+        # Heat flux from the compute-phase power (full activity), not
+        # the stall-averaged power: bandwidth stalls only cool the
+        # stack, so masking on the active-phase temperature is the
+        # conservative (and uncapped-identical) choice.
         lmax = int(np.max(Lf))
         idx = np.arange(lmax)[None, :]
         alive = idx < Lf[:, None]
@@ -772,16 +908,24 @@ def optimal_tiers_batched(
     backend: str = "numpy",
     chunk: int = _DEFAULT_CHUNK,
     shard: int | str | None = None,
+    tech: str = "tsv",
+    bandwidth: BandwidthSpec | dict | None = None,
 ):
     """Batched Fig.-7 argmin over tier count for every (workload, budget).
 
     Returns ``(best_tiers, best_cycles)`` int64/float64 arrays of shape
-    (W, B). Ties break toward fewer tiers, matching the scalar
-    ``analytical.optimal_tiers`` loop exactly.
+    (W, B) — cycles at the model's 1 GHz clock. Ties break toward fewer
+    tiers, matching the scalar ``analytical.optimal_tiers`` loop
+    exactly. With ``bandwidth`` set, the argmin runs over the
+    bandwidth-aware roofline cycles (``tech`` selects the vertical-link
+    technology for the derived vlink width) — the paper's Fig.-7 tier
+    optimum under a finite memory system instead of peak compute.
     """
     wl = np.atleast_2d(np.asarray(workloads, dtype=np.int64))
     budgets = _as_1d_int(mac_budgets)
     W, B, T = wl.shape[0], budgets.shape[0], int(max_tiers)
+    if bandwidth is not None and not isinstance(bandwidth, BandwidthSpec):
+        bandwidth = BandwidthSpec.from_dict(bandwidth)
     # Direct search over the flattened (W x B x T) grid: unlike a full
     # evaluate() this skips the 2D-baseline pass Fig. 7 never uses.
     Mf = np.repeat(wl[:, 0], B * T)
@@ -789,12 +933,21 @@ def optimal_tiers_batched(
     Nf = np.repeat(wl[:, 2], B * T)
     Lf = np.tile(np.arange(1, T + 1, dtype=np.int64), W * B)
     nm = np.tile(np.repeat(budgets, T), W)
-    _, _, t = _optimize_flat(
+    r, c, t = _optimize_flat(
         Mf, Kf, Nf, nm, Lf, "dos", mode, backend, chunk,
         _resolve_shards(shard, backend),
     )
     cyc = np.where(t != INVALID_CYCLES, t, 0).astype(np.float64)
     cyc[t == INVALID_CYCLES] = np.inf
+    if bandwidth is not None:
+        validate_option("tech", tech, VALID_TECHS)
+        tr = gemm_traffic_batched(
+            "dos", Mf, Kf, Nf, r, c, Lf, np.full(Lf.shape, tech), bandwidth
+        )
+        cyc, _, _ = roofline_cycles(
+            cyc, tr["dram_bytes"] / bandwidth.dram_bytes_per_cycle,
+            tr["vlink_cycles"],
+        )
     cyc = cyc.reshape(W, B, T)
     best = np.argmin(cyc, axis=2)
     best_cycles = np.take_along_axis(cyc, best[:, :, None], axis=2)[:, :, 0]
@@ -812,7 +965,13 @@ class PolicyResult:
     ``per_layer``: every layer runs on its own best feasible array
     design (the DSE upper bound). ``fixed``: ONE array design (rows x
     cols x tiers) serves every layer — the physically buildable case.
-    ``total_cycles`` is inf when no feasible design exists.
+    ``total_cycles`` [cycles at 1 GHz] is inf when no feasible design
+    exists; ``time_s`` [s], ``energy_j`` [J], ``edp_js`` [J*s],
+    ``t_max_c`` [degC]. ``stall_cycles``/``bound`` summarize the
+    bandwidth-aware run (count-weighted stall total and the bound
+    class carrying the largest share of runtime); they stay at their
+    compute-bound defaults when ``schedule`` ran without a bandwidth
+    spec.
     """
 
     policy: str
@@ -828,10 +987,12 @@ class PolicyResult:
     #: per-layer: (n_gemms, 3) int array of (rows, cols, tiers) per
     #: layer; fixed: the single (rows, cols, tiers) chosen.
     design: np.ndarray
+    stall_cycles: float = 0.0
+    bound: str = "compute"
 
     _FLOAT_FIELDS = (
         "total_cycles", "time_s", "energy_j", "edp_js", "total_cycles_2d",
-        "speedup_vs_2d", "t_max_c", "utilization",
+        "speedup_vs_2d", "t_max_c", "utilization", "stall_cycles",
     )
 
     @classmethod
@@ -840,8 +1001,11 @@ class PolicyResult:
         kw["design"] = np.asarray(d["design"], dtype=np.int64)
         for name in cls._FLOAT_FIELDS:
             # float() also decodes the strict-JSON "Infinity"/"NaN"
-            # encoding of non-finite values (see study._jsonify)
-            kw[name] = float(kw[name])
+            # encoding of non-finite values (see study._jsonify);
+            # pre-bandwidth artifacts lack stall_cycles/bound and take
+            # the compute-bound defaults.
+            if name in kw:
+                kw[name] = float(kw[name])
         return cls(**kw)
 
 
@@ -916,7 +1080,8 @@ def thermal_feasible(
 
 
 def _reduce_policy(
-    policy, counts, cycles, energy, t_max, util_den, cycles_2d, design, freq_hz
+    policy, counts, cycles, energy, t_max, util_den, cycles_2d, design, freq_hz,
+    stall_cycles: float = 0.0, bound: str = "compute",
 ):
     """Totals for one policy given the per-layer chosen columns."""
     total_cycles = float(np.sum(counts * cycles))
@@ -940,6 +1105,8 @@ def _reduce_policy(
         utilization=float(util_den) if feasible else float("nan"),
         feasible=feasible,
         design=design,
+        stall_cycles=stall_cycles,
+        bound=bound,
     )
 
 
@@ -954,6 +1121,7 @@ def schedule(
     require_feasible: bool = True,
     chunk: int | None = None,
     shard: int | str | None = None,
+    bandwidth: BandwidthSpec | dict | None = None,
 ) -> NetworkReport:
     """Evaluate a whole lowered network stream on the design grid.
 
@@ -962,7 +1130,8 @@ def schedule(
     works). The engine evaluates the stream batched over the (budget x
     tier) grid once, derives the candidate fixed-array designs from the
     per-layer optima, re-evaluates those shared designs explicitly, and
-    reduces to network-level totals under two policies:
+    reduces to network-level totals (cycles at 1 GHz, seconds, joules,
+    J*s, degC) under two policies:
 
     - ``per_layer``: each GEMM on its own best feasible design — the
       DSE upper bound (what per-layer papers report).
@@ -972,10 +1141,21 @@ def schedule(
       per_layer.total_cycles`` by construction.
 
     Thermal feasibility is first-class: designs whose lumped stack
-    temperature reaches ``thermal_limit`` are excluded from both optima
-    (``require_feasible=False`` disables the mask, for ablations).
-    Speedups are against the budget-matched optimized 2D baseline of
-    the same dataflow family, reduced with the same per-layer counts.
+    temperature reaches ``thermal_limit`` [degC] are excluded from both
+    optima (``require_feasible=False`` disables the mask, for
+    ablations). Speedups are against the budget-matched optimized 2D
+    baseline of the same dataflow family, reduced with the same
+    per-layer counts.
+
+    ``bandwidth`` (a ``core.bandwidth.BandwidthSpec``) makes the whole
+    reduction bandwidth-aware: candidate designs are still the
+    compute-optimal per-layer shapes (the search is not re-run under
+    stalls), but their per-layer cycles/energy include DRAM and
+    vertical-link stalls, SRAM capacity joins the feasibility mask,
+    and both policy optima are taken over the stalled totals — which
+    can (and does; regression-pinned) flip the winning fixed design
+    under a DRAM cap. Uncapped/None is bit-identical to the plain
+    schedule.
     """
     validate_option("dataflow", dataflow, VALID_DATAFLOWS)
     validate_option("tech", tech, VALID_TECHS)
@@ -1015,10 +1195,15 @@ def schedule(
         dataflow=dataflow, tech=tech,
     )
     res2 = evaluate(
-        grid2, backend=backend, chunk=chunk, thermal_limit=thermal_limit, shard=shard
+        grid2, backend=backend, chunk=chunk, thermal_limit=thermal_limit,
+        shard=shard, bandwidth=bandwidth,
     )
     feas = res2.feasible if require_feasible else res2.valid
-    n_thermal_masked = int(np.sum(np.all(res2.valid, axis=0) & ~np.all(res2.feasible, axis=0)))
+    # counted from the thermal mask alone — under a bandwidth spec,
+    # feasible also carries the SRAM-capacity mask, which must not be
+    # misattributed to overheating in the report
+    thermal_ok = res2.valid & res2.within_thermal_budget
+    n_thermal_masked = int(np.sum(np.all(res2.valid, axis=0) & ~np.all(thermal_ok, axis=0)))
 
     cyc = np.where(feas, res2.cycles, np.inf)
     energy = np.where(feas, res2.energy_j, np.inf)
@@ -1031,17 +1216,31 @@ def schedule(
         den = np.sum(counts * n_macs_used[chosen_cols] * chosen_cycles)
         return np.sum(counts * workload_macs) / den if den > 0 else np.nan
 
+    def bw_summary(chosen_cycles, layer_rows, layer_cols):
+        """Count-weighted stall total [cycles] + dominant bound class."""
+        if res2.stall_cycles is None:
+            return 0.0, "compute"
+        fin = np.isfinite(chosen_cycles)
+        stall = float(np.sum(
+            counts * np.where(fin, res2.stall_cycles[layer_rows, layer_cols], 0.0)
+        ))
+        weight = counts * np.where(fin, chosen_cycles, 0.0)
+        b = res2.bound[layer_rows, layer_cols]
+        shares = {n: float(np.sum(weight[b == n])) for n in BOUND_NAMES}
+        return stall, max(BOUND_NAMES, key=lambda n: shares[n])
+
     # --- per-layer-optimal policy -------------------------------------
     best = np.argmin(cyc, axis=1)  # (W,)
     rows_w = np.arange(W)
     pl_cyc = cyc[rows_w, best]
+    pl_stall, pl_bound = bw_summary(pl_cyc, rows_w, best)
     per_layer = _reduce_policy(
         "per_layer", counts, pl_cyc,
         energy[rows_w, best],
         np.where(np.isfinite(pl_cyc), res2.t_max_c[rows_w, best], np.nan),
         util(pl_cyc, best),
         np.where(np.isfinite(pl_cyc), res2.cycles_2d[rows_w, best], np.inf),
-        cand[best], freq,
+        cand[best], freq, pl_stall, pl_bound,
     )
 
     # --- fixed-design policy ------------------------------------------
@@ -1049,13 +1248,15 @@ def schedule(
     tot = np.sum(counts[:, None] * cyc, axis=0)
     c_star = int(np.argmin(tot))
     fx_cyc = cyc[:, c_star]
+    fx_cols = np.full(W, c_star)
+    fx_stall, fx_bound = bw_summary(fx_cyc, rows_w, fx_cols)
     fixed = _reduce_policy(
         "fixed", counts, fx_cyc,
         energy[:, c_star],
         np.where(np.isfinite(fx_cyc), res2.t_max_c[:, c_star], np.nan),
-        util(fx_cyc, np.full(W, c_star)),
+        util(fx_cyc, fx_cols),
         np.where(np.isfinite(fx_cyc), res2.cycles_2d[:, c_star], np.inf),
-        cand[c_star], freq,
+        cand[c_star], freq, fx_stall, fx_bound,
     )
 
     return NetworkReport(

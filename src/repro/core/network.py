@@ -102,6 +102,35 @@ class WorkloadStream:
     def n_gemm_invocations(self) -> int:
         return int(self.counts.sum())
 
+    def compulsory_bytes(self, bytes_in: int = 1, bytes_acc: int = 2) -> int:
+        """Count-weighted compulsory DRAM traffic [bytes] of one run.
+
+        Each GEMM reads A (M*K) and B (K*N) once at ``bytes_in`` and
+        writes its output (M*N) once at ``bytes_acc`` — the floor no
+        SRAM capacity can beat; the engine's bandwidth model
+        (``core.bandwidth``) converges to exactly this with unbounded
+        per-tier SRAM.
+        """
+        return int(
+            sum(
+                g.count * ((g.M * g.K + g.K * g.N) * bytes_in
+                           + g.M * g.N * bytes_acc)
+                for g in self.gemms
+            )
+        )
+
+    def arithmetic_intensity(self, bytes_in: int = 1, bytes_acc: int = 2) -> float:
+        """MAC-ops per compulsory DRAM byte [ops/byte].
+
+        The stream-level roofline knee: against a DRAM interface of
+        ``B`` bytes/cycle, streams below ``B`` ops/byte per MAC are
+        memory-bound even with perfect reuse — decode streams sit far
+        below train/prefill ones (the bandwidth model's headline
+        effect on the model zoo).
+        """
+        b = self.compulsory_bytes(bytes_in, bytes_acc)
+        return self.total_macs / b if b else float("nan")
+
 
 def _merge(arch: str, shape: str, mode: Mode, items) -> WorkloadStream:
     """Merge identical (M, K, N) shapes, keeping the first name."""

@@ -38,6 +38,7 @@ VALID_BACKENDS = ("numpy", "jax")
 #: shape-search modes: full rectangular search vs square arrays.
 VALID_MODES = ("opt", "square")
 #: minimizable ``EvalResult`` metric columns (Pareto objectives).
+#: ``stall_cycles`` is populated only by bandwidth-aware runs.
 VALID_OBJECTIVES = (
     "cycles",
     "cycles_2d",
@@ -54,6 +55,7 @@ VALID_OBJECTIVES = (
     "energy_j",
     "edp_js",
     "t_max_c",
+    "stall_cycles",
 )
 
 

@@ -42,6 +42,7 @@ import pathlib
 
 import numpy as np
 
+from .bandwidth import BOUND_NAMES, BandwidthSpec
 from .cache import ResultCache
 from .engine import (
     MESH_STRATEGIES,
@@ -71,6 +72,7 @@ __all__ = [
     "SWEEP_FIGURES",
     "WORKLOAD_KINDS",
     "AnalysisSpec",
+    "BandwidthSpec",
     "ConstraintSpec",
     "SpaceSpec",
     "Study",
@@ -82,7 +84,7 @@ __all__ = [
 SPEC_VERSION = 1
 
 WORKLOAD_KINDS = ("gemms", "network", "random")
-ANALYSIS_KINDS = ("evaluate", "schedule", "pareto", "advise", "sweep")
+ANALYSIS_KINDS = ("evaluate", "schedule", "pareto", "advise", "sweep", "roofline")
 SWEEP_FIGURES = ("fig5", "fig6", "fig7")
 
 
@@ -292,10 +294,14 @@ class SpaceSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ConstraintSpec:
-    """Feasibility constraints. The thermal limit feeds the engine's
-    first-class mask; the optional caps additionally strike design
-    points whose provisioned MAC budget / silicon area / average power
-    overshoot (reported as ``constraint_mask`` in the payload).
+    """Feasibility constraints. The thermal limit [degC] feeds the
+    engine's first-class mask; the optional caps additionally strike
+    design points whose provisioned MAC budget [MACs] / silicon area
+    [um^2] / average power [W] / minimal SRAM working set [KiB per
+    tier] overshoot (reported as ``constraint_mask`` in the payload).
+    ``max_sram_kib_per_tier`` is the capacity cap: it needs the
+    bandwidth model active (``AnalysisSpec.bandwidth``) so
+    ``sram_need_bytes`` exists to compare against.
     ``require_feasible=False`` lets optima/frontiers ignore the mask
     (ablations)."""
 
@@ -303,13 +309,14 @@ class ConstraintSpec:
     max_mac_budget: int | None = None
     max_area_um2: float | None = None
     max_power_w: float | None = None
+    max_sram_kib_per_tier: float | None = None
     require_feasible: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "thermal_limit_c", float(self.thermal_limit_c))
         if self.max_mac_budget is not None:
             object.__setattr__(self, "max_mac_budget", int(self.max_mac_budget))
-        for name in ("max_area_um2", "max_power_w"):
+        for name in ("max_area_um2", "max_power_w", "max_sram_kib_per_tier"):
             v = getattr(self, name)
             if v is not None:
                 object.__setattr__(self, name, float(v))
@@ -319,7 +326,8 @@ class ConstraintSpec:
     def has_caps(self) -> bool:
         return any(
             v is not None
-            for v in (self.max_mac_budget, self.max_area_um2, self.max_power_w)
+            for v in (self.max_mac_budget, self.max_area_um2, self.max_power_w,
+                      self.max_sram_kib_per_tier)
         )
 
     def mask(self, res: EvalResult) -> np.ndarray:
@@ -333,6 +341,13 @@ class ConstraintSpec:
                 else grid.rows * grid.cols * grid.tiers
             )
             m = m & (b <= self.max_mac_budget)[None, :]
+        if self.max_sram_kib_per_tier is not None:
+            if res.sram_need_bytes is None:
+                raise ValueError(
+                    "max_sram_kib_per_tier needs the bandwidth model active "
+                    "(set AnalysisSpec.bandwidth) so sram_need_bytes exists"
+                )
+            m = m & (res.sram_need_bytes <= self.max_sram_kib_per_tier * 1024.0)
         for cap, metric in (
             (self.max_area_um2, "area_um2"),
             (self.max_power_w, "power_w"),
@@ -374,6 +389,17 @@ class AnalysisSpec:
       ``params``.
     - ``'sweep'``: a paper figure (``figure`` in fig5|fig6|fig7) over
       the study's space.
+    - ``'roofline'``: evaluate under the (required) ``bandwidth``
+      memory system and classify every design point as compute- /
+      memory- / vlink-bound, with the stall breakdown in the payload.
+
+    ``bandwidth`` (a ``core.bandwidth.BandwidthSpec`` or its dict
+    form) attaches the bandwidth-aware runtime model to ANY kind:
+    evaluate/pareto/sweep results gain ``stall_cycles``/``bound`` and
+    the SRAM feasibility mask, schedule reduces over stalled cycles,
+    and advise maps a finite ``dram_gbs`` [GB/s] onto the mesh
+    advisor's HBM term. ``None`` (default) keeps the compute-bound
+    model bit-for-bit.
 
     ``chunk=None`` uses the engine default, except for network
     workloads where the adaptive bound kicks in (token-sized M dims).
@@ -390,11 +416,26 @@ class AnalysisSpec:
     axis: int = 16
     mac_budget: int | None = None
     figure: str | None = None
+    bandwidth: BandwidthSpec | dict | None = None
     params: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         validate_option("analysis kind", self.kind, ANALYSIS_KINDS)
         validate_option("backend", self.backend, VALID_BACKENDS)
+        if self.bandwidth is not None and not isinstance(self.bandwidth, BandwidthSpec):
+            if not isinstance(self.bandwidth, dict):
+                raise ValueError(
+                    f"bandwidth must be a BandwidthSpec or dict, "
+                    f"got {type(self.bandwidth).__name__}"
+                )
+            object.__setattr__(
+                self, "bandwidth", BandwidthSpec.from_dict(self.bandwidth)
+            )
+        if self.kind == "roofline" and self.bandwidth is None:
+            raise ValueError(
+                "kind='roofline' needs a bandwidth= spec — the memory system "
+                "whose bounds it classifies (e.g. BandwidthSpec.paper_default())"
+            )
         if self.shard is not None and self.shard not in ("auto", "none"):
             try:
                 n = int(self.shard)
@@ -518,6 +559,11 @@ class Study:
     def run(self, cache=None) -> "StudyResult":
         """Compile the specs into the engine and return the artifact.
 
+        The payload's units follow ``engine.EvalResult`` /
+        ``engine.PolicyResult``: cycles at the model's 1 GHz clock,
+        bytes, watts, joules, J*s, um^2, degC; bandwidth knobs are
+        GB/s (DRAM) and KiB (SRAM per tier).
+
         ``cache`` (a path or ``core.cache.ResultCache``) turns on
         content-addressed chunk caching: the grid is split into
         sub-grid chunks keyed by the canonical spec hash + index range,
@@ -568,6 +614,7 @@ class Study:
         kw["metrics"] = self.analysis.metrics if metrics is None else metrics
         kw["thermal_limit"] = self.constraints.thermal_limit_c
         kw["shard"] = self.analysis.shard
+        kw["bandwidth"] = self.analysis.bandwidth
         if cache is None:
             return evaluate(grid, **kw)
         # Chunked, cached execution: consecutive point-blocks, each
@@ -597,6 +644,26 @@ class Study:
             "n_valid": int(res.valid.sum()),
             "n_feasible": int(mask.sum()),
         }
+
+    def _run_roofline(self, stream, cache: ResultCache | None = None) -> dict:
+        """Bandwidth-aware evaluate + per-point bound classification.
+
+        Same engine pass (and the same chunked/cached/sharded execution
+        paths) as ``'evaluate'`` — the bandwidth spec is mandatory, so
+        the payload additionally carries the bound histogram over valid
+        points and the aggregate stall share of total runtime."""
+        payload = self._run_evaluate(stream, cache=cache)
+        res = payload["result"]
+        v = res.valid
+        payload["bound_counts"] = {
+            name: int(np.sum(v & (np.asarray(res.bound) == name)))
+            for name in BOUND_NAMES
+        }
+        cycles_total = float(np.sum(res.cycles[v]))
+        stall_total = float(np.sum(np.where(v, res.stall_cycles, 0.0)))
+        payload["stall_cycles_total"] = stall_total
+        payload["stall_frac"] = stall_total / cycles_total if cycles_total else 0.0
+        return payload
 
     def _run_pareto(self, stream, cache: ResultCache | None = None) -> dict:
         payload = self._run_evaluate(stream, cache=cache)
@@ -642,6 +709,7 @@ class Study:
             thermal_limit=self.constraints.thermal_limit_c,
             require_feasible=self.constraints.require_feasible,
             shard=self.analysis.shard,
+            bandwidth=self.analysis.bandwidth,
             **kw,
         )
         payload = {"report": rep}
@@ -662,13 +730,20 @@ class Study:
             d = cache.load_chunk(self, "advise")
             if d is not None:
                 return _restore_payload("advise", d)
+        params = dict(self.analysis.params)
+        bw = self.analysis.bandwidth
+        if bw is not None and math.isfinite(bw.dram_gbs):
+            # The mesh advisor's memory term is its HBM model [bytes/s];
+            # a finite DRAM cap maps straight onto it (an explicit
+            # params['hbm_bw'] still wins).
+            params.setdefault("hbm_bw", bw.dram_gbs * 1e9)
         names, totals = _rank(
             stream.workloads,
             self.analysis.axis,
             mac_budget=self.analysis.mac_budget,
             tech=self.space.tech,
             thermal_limit=self.constraints.thermal_limit_c,
-            **self.analysis.params,
+            **params,
         )
         payload = {
             "strategies": list(MESH_STRATEGIES),
@@ -732,6 +807,13 @@ class Study:
         """
         kw = dict(max_tiers=max_tiers, mode=self.space.mode,
                   backend=self.analysis.backend, shard=self.analysis.shard)
+        if self.analysis.bandwidth is not None:
+            if not isinstance(self.space.tech, str):
+                raise ValueError(
+                    "a bandwidth-aware fig7 sweep needs a single tech "
+                    "(the derived vertical-link width is per-technology)"
+                )
+            kw.update(bandwidth=self.analysis.bandwidth, tech=self.space.tech)
         wl = np.atleast_2d(np.asarray(stream.workloads, dtype=np.int64))
         if cache is None:
             return optimal_tiers_batched(wl, budgets, **kw)
@@ -786,6 +868,15 @@ class Study:
                                       gemms=((64, 255, 147), (64, 12100, 147))),
                 space=space,
                 analysis=AnalysisSpec(kind="sweep", figure="fig5"),
+            )
+        if kind == "roofline":
+            return cls(
+                name="example-roofline",
+                workload=WorkloadSpec(kind="gemms", gemms=gemms),
+                space=space,
+                analysis=AnalysisSpec(
+                    kind="roofline", bandwidth=BandwidthSpec.paper_default()
+                ),
             )
         return cls(
             name=f"example-{kind}",
@@ -896,6 +987,15 @@ class StudyResult:
     def describe(self) -> str:
         """One-line human summary (what the CLI prints)."""
         name = self.study.name or "<unnamed>"
+        if self.kind == "roofline":
+            W, P = self.result.valid.shape
+            bc = self.payload["bound_counts"]
+            mix = ", ".join(f"{k}: {v}" for k, v in bc.items())
+            return (
+                f"{name}: roofline {W} workloads x {P} design points — "
+                f"bounds {mix}; stalls {self.payload['stall_frac']:.1%} of "
+                f"total cycles"
+            )
         if self.kind in ("evaluate", "pareto"):
             res = self.result
             W, P = res.valid.shape

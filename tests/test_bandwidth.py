@@ -1,0 +1,352 @@
+"""Bandwidth-aware runtime model: identity, bounds, masks, flips.
+
+The contract under test (ISSUE 5 acceptance criteria):
+
+- uncapped identity: ``evaluate``/``schedule`` with ``bandwidth=None``
+  or an unbounded ``BandwidthSpec()`` are bit-for-bit the seed results;
+- a pinned memory-bound scenario collapses the 3D-vs-2D speedup below
+  the compute-bound prediction (the paper's 9.14x regime);
+- the TSV-vs-MIV technology choice is a *bandwidth* distinction on the
+  vertical links, not only a capacitance one;
+- SRAM capacity joins thermal as a first-class feasibility mask;
+- a DRAM cap flips a schedule fixed-design winner AND an advisor
+  strategy winner (both pinned);
+- the batched artifact roofline (``analysis.roofline``) agrees with
+  the scalar properties on its existing fixtures;
+- streaming / chunk-caching compose with the bandwidth model without
+  changing a bit.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.bandwidth import (
+    BOUND_NAMES,
+    BandwidthSpec,
+    gemm_traffic_batched,
+    resolve_vlink_bits,
+    roofline_cycles,
+)
+from repro.core.engine import DesignGrid, PolicyResult, evaluate, optimal_tiers_batched, schedule
+from repro.core.network import lower_network
+from repro.configs import REGISTRY, SHAPES
+from repro.core.study import (
+    AnalysisSpec,
+    ConstraintSpec,
+    SpaceSpec,
+    Study,
+    StudyResult,
+    WorkloadSpec,
+)
+
+RN0 = (64, 12100, 147)  # ResNet50 RN0 (Table I) — the paper's headline GEMM
+WL = [RN0, (512, 784, 128)]
+GRID = DesignGrid.product(WL, (2**14, 2**16, 2**18), range(1, 17))
+
+
+def _assert_eval_equal(a, b):
+    for f in dataclasses.fields(type(a)):
+        if f.name == "grid":
+            continue
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if va is None and vb is None:
+            continue
+        assert va is not None and vb is not None, f.name
+        np.testing.assert_array_equal(va, vb, err_msg=f.name)
+
+
+# ---------------------------------------------------------------------------
+# Uncapped identity (the seed contract)
+# ---------------------------------------------------------------------------
+
+def test_uncapped_spec_is_bit_identical_to_plain_evaluate():
+    plain = evaluate(GRID)
+    unb = evaluate(GRID, bandwidth=BandwidthSpec())
+    for f in ("rows", "cols", "cycles", "cycles_2d", "speedup", "utilization",
+              "valid", "area_um2", "power_w", "energy_j", "edp_js", "t_max_c",
+              "within_thermal_budget"):
+        np.testing.assert_array_equal(
+            getattr(plain, f), getattr(unb, f), err_msg=f
+        )
+    v = unb.valid
+    assert np.all(unb.stall_cycles[v] == 0.0)
+    assert np.all(unb.bound[v] == "compute")
+    assert unb.within_sram_capacity.all()
+    np.testing.assert_array_equal(plain.feasible, unb.feasible)
+
+
+def test_uncapped_schedule_is_bit_identical():
+    stream = lower_network(REGISTRY["smollm-135m"], SHAPES["decode_32k"])
+    rep0 = schedule(stream, mac_budgets=(2**14, 2**16), tiers=range(1, 9))
+    rep1 = schedule(stream, mac_budgets=(2**14, 2**16), tiers=range(1, 9),
+                    bandwidth=BandwidthSpec())
+    assert rep0.to_dict() == rep1.to_dict()
+    assert rep1.fixed.stall_cycles == 0.0
+    assert rep1.fixed.bound == "compute"
+
+
+def test_compute_bound_points_unchanged_under_generous_cap():
+    # A finite but generous memory system: every point that stays
+    # compute-bound must carry exactly the seed cycles, and — where the
+    # 2D baseline is compute-bound too — exactly the seed speedup.
+    plain = evaluate(GRID, metrics=("perf",))
+    res = evaluate(
+        GRID, metrics=("perf",),
+        bandwidth=BandwidthSpec(dram_gbs=4096.0, sram_kib_per_tier=1 << 20),
+    )
+    cb = res.valid & (res.bound == "compute")
+    assert cb.any()
+    np.testing.assert_array_equal(res.cycles[cb], plain.cycles[cb])
+    both = cb & (res.cycles_2d == plain.cycles_2d)
+    assert both.any()
+    np.testing.assert_array_equal(res.speedup[both], plain.speedup[both])
+
+
+# ---------------------------------------------------------------------------
+# Memory-bound collapse (pinned)
+# ---------------------------------------------------------------------------
+
+def test_memory_bound_speedup_collapse_pinned():
+    grid = DesignGrid.product([RN0], (2**18,), range(1, 17))
+    comp = evaluate(grid, metrics=("perf",))
+    # The paper's compute-bound regime: ~9x+ at 2^18 MACs (Fig. 5).
+    assert float(np.nanmax(comp.speedup)) > 9.0
+    res = evaluate(grid, bandwidth=BandwidthSpec(dram_gbs=8.0,
+                                                 sram_kib_per_tier=256.0,
+                                                 vlink_bits_per_mac="derived"))
+    v = res.valid
+    assert np.all(res.bound[v] == "memory")
+    # Memory-bound both sides of the 2D/3D comparison: the DRAM floor
+    # is (near-)common, so the 9x+ speedup collapses to ~1x.
+    assert float(np.nanmax(res.speedup)) <= 1.01
+    # cycles are the roofline total: the memory term itself.
+    np.testing.assert_allclose(res.cycles[v], res.mem_cycles[v])
+    assert np.all(res.stall_cycles[v] > 0)
+
+
+# ---------------------------------------------------------------------------
+# Vertical links: TSV vs MIV is a bandwidth distinction
+# ---------------------------------------------------------------------------
+
+def test_vlink_bound_tsv_vs_miv_pinned():
+    spec = BandwidthSpec(vlink_bits_per_mac="derived")
+    kw = dict(rows=[2], cols=[2], tiers=[4])
+    tsv = evaluate(DesignGrid.explicit([(64, 8, 64)], tech="tsv", **kw),
+                   bandwidth=spec)
+    miv = evaluate(DesignGrid.explicit([(64, 8, 64)], tech="miv", **kw),
+                   bandwidth=spec)
+    # tau = (2*2 + 2 + (ceil(8/4) + 4 - 1) - 2) * 32 * 32 = 9216 cycles;
+    # TSV shared bus: 1024 folds * 16 B / (4 MACs * 17/16 bits / 8)
+    assert miv.bound[0, 0] == "compute"
+    assert miv.cycles[0, 0] == 9216.0
+    assert tsv.bound[0, 0] == "vlink"
+    np.testing.assert_allclose(tsv.cycles[0, 0], 1024 * 16 * 16 / 17)
+    assert tsv.cycles[0, 0] > miv.cycles[0, 0]
+
+
+def test_resolve_vlink_bits_derived():
+    spec = BandwidthSpec(vlink_bits_per_mac="derived")
+    bits = resolve_vlink_bits(spec, np.array(["2d", "tsv", "miv"]))
+    assert np.isinf(bits[0])
+    assert bits[1] == pytest.approx(17 / 16)
+    assert bits[2] == 17.0
+
+
+# ---------------------------------------------------------------------------
+# SRAM capacity: feasibility mask + constraint cap
+# ---------------------------------------------------------------------------
+
+def test_sram_capacity_feasibility_mask():
+    grid = DesignGrid.explicit([(256, 300, 256)], rows=[16, 64],
+                               cols=[16, 64], tiers=[2, 2])
+    res = evaluate(grid, bandwidth=BandwidthSpec(sram_kib_per_tier=1.0))
+    # 16x16: 512 B plane + 128 B streams fits 1 KiB; 64x64 does not.
+    np.testing.assert_array_equal(res.within_sram_capacity[0], [True, False])
+    np.testing.assert_array_equal(res.feasible[0], [True, False])
+    # and the frontier respects it
+    mask = res.pareto_mask(("cycles",))
+    assert not mask[0, 1]
+
+
+def test_constraint_capacity_cap_requires_bandwidth():
+    study = Study(
+        workload=WorkloadSpec(kind="gemms", gemms=(RN0,)),
+        space=SpaceSpec(mac_budgets=(2**16,), tiers=(1, 4)),
+        constraints=ConstraintSpec(max_sram_kib_per_tier=16.0),
+    )
+    with pytest.raises(ValueError, match="bandwidth"):
+        study.run()
+    ok = dataclasses.replace(
+        study, analysis=AnalysisSpec(bandwidth=BandwidthSpec(dram_gbs=256.0))
+    )
+    payload = ok.run().payload
+    assert payload["constraint_mask"].shape == (1, 2)
+    need = ok.run().result.sram_need_bytes
+    np.testing.assert_array_equal(
+        payload["constraint_mask"][0], (need[0] <= 16 * 1024)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pinned winner flips under a DRAM cap
+# ---------------------------------------------------------------------------
+
+def test_schedule_fixed_design_flips_under_dram_cap():
+    stream = lower_network(REGISTRY["smollm-135m"], SHAPES["decode_32k"])
+    kw = dict(mac_budgets=(2**14, 2**16), tiers=range(1, 9))
+    rep0 = schedule(stream, **kw)
+    repc = schedule(stream, bandwidth=BandwidthSpec(
+        dram_gbs=16.0, sram_kib_per_tier=64.0, vlink_bits_per_mac="derived",
+    ), **kw)
+    np.testing.assert_array_equal(rep0.fixed.design, [128, 256, 2])
+    np.testing.assert_array_equal(repc.fixed.design, [128, 64, 8])
+    assert repc.fixed.bound == "memory"
+    assert repc.fixed.stall_cycles > 0
+    # the structural guarantee survives the bandwidth model
+    assert repc.fixed.total_cycles >= repc.per_layer.total_cycles
+
+
+def test_advisor_winner_flips_under_dram_cap():
+    def run(bw):
+        return Study(
+            workload=WorkloadSpec(kind="gemms", gemms=((8, 32768, 1024),)),
+            analysis=AnalysisSpec(kind="advise", axis=16, bandwidth=bw),
+        ).run().payload["names"]
+
+    assert run(None)[0] == "shard_N"
+    assert run(BandwidthSpec(dram_gbs=20.0))[0] == "shard_K"
+
+
+def test_fig7_tier_optimum_flips_under_dram_cap():
+    plain_t, _ = optimal_tiers_batched([RN0], [2**16])
+    capped_t, _ = optimal_tiers_batched(
+        [RN0], [2**16], bandwidth=BandwidthSpec(dram_gbs=4.0)
+    )
+    assert plain_t[0, 0] == 13
+    assert capped_t[0, 0] == 1
+
+
+# ---------------------------------------------------------------------------
+# Batched == scalar on the legacy artifact-roofline fixtures
+# ---------------------------------------------------------------------------
+
+def test_artifact_roofline_batched_matches_scalar_fixtures():
+    from repro.analysis.roofline import (
+        CollectiveStats,
+        roofline_from_artifact,
+        roofline_terms_batched,
+    )
+
+    # the fixture grid from tests/test_roofline_parse.py, extended with
+    # kernel-adjusted and tie cases
+    cases = [
+        dict(cost={"flops": 197e12, "bytes accessed": 819e9}, wire=50e9, kb=0.0),
+        dict(cost={"flops": 98.5e12, "bytes accessed": 2 * 819e9}, wire=1e9, kb=0.0),
+        dict(cost={"flops": 197e12, "bytes accessed": 3 * 819e9}, wire=0.0, kb=819e9),
+        dict(cost={"flops": 0.0, "bytes accessed": 0.0}, wire=200e9, kb=0.0),
+    ]
+    rooflines = [
+        roofline_from_artifact(
+            arch="a", shape="s", mesh_name="m", n_chips=16,
+            cost=c["cost"],
+            coll=CollectiveStats(wire_bytes=c["wire"], result_bytes=0.0,
+                                 counts={}, by_op_bytes={}),
+            model_flops=1e15, kernel_bytes=c["kb"],
+        )
+        for c in cases
+    ]
+    batched = roofline_terms_batched(
+        [r.compute_s for r in rooflines],
+        [r.memory_s for r in rooflines],
+        [r.collective_s for r in rooflines],
+        [r.memory_s_kernel for r in rooflines],
+    )
+    for i, r in enumerate(rooflines):
+        assert batched["dominant"][i] == r.dominant
+        assert batched["step_s"][i] == r.step_s
+
+
+# ---------------------------------------------------------------------------
+# Streaming / caching / serialization compose with the bandwidth model
+# ---------------------------------------------------------------------------
+
+def test_streamed_bandwidth_evaluate_bit_identical():
+    spec = BandwidthSpec.paper_default()
+    one = evaluate(GRID, bandwidth=spec)
+    streamed = evaluate(GRID, bandwidth=spec, stream=5)
+    _assert_eval_equal(one, streamed)
+
+
+def test_cached_roofline_study_resumes_bit_identical(tmp_path):
+    study = Study(
+        name="bw-cache",
+        workload=WorkloadSpec(kind="gemms", gemms=WL),
+        space=SpaceSpec(mac_budgets=(2**14, 2**16), tiers=tuple(range(1, 9))),
+        analysis=AnalysisSpec(kind="roofline",
+                              bandwidth=BandwidthSpec.paper_default(),
+                              chunk=None),
+    )
+    cold = study.run(cache=tmp_path)
+    warm = study.run(cache=tmp_path)
+    assert cold.cache["misses"] > 0 and warm.cache["misses"] == 0
+    _assert_eval_equal(cold.result, warm.result)
+    assert cold.payload["bound_counts"] == warm.payload["bound_counts"]
+    # and the artifact round-trips losslessly (bound strings included)
+    art = StudyResult.from_json(cold.to_json())
+    _assert_eval_equal(art.result, cold.result)
+
+
+def test_bandwidth_spec_json_roundtrip_and_validation():
+    for spec in (BandwidthSpec(), BandwidthSpec.paper_default(),
+                 BandwidthSpec(dram_gbs=8.0, vlink_bits_per_mac=4.25)):
+        rt = BandwidthSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+        assert rt == spec
+    assert BandwidthSpec().unbounded
+    assert not BandwidthSpec.paper_default().unbounded
+    with pytest.raises(ValueError, match="dram_gbs"):
+        BandwidthSpec(dram_gbs=0)
+    with pytest.raises(ValueError, match="vlink"):
+        BandwidthSpec(vlink_bits_per_mac="huge")
+    spec = Study.example("roofline")
+    assert Study.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError, match="bandwidth"):
+        AnalysisSpec(kind="roofline")
+
+
+def test_policy_result_backward_compatible_from_dict():
+    d = dict(policy="fixed", total_cycles=1.0, time_s=1e-9, energy_j=1.0,
+             edp_js=1e-9, total_cycles_2d=2.0, speedup_vs_2d=2.0,
+             t_max_c=50.0, utilization=0.5, feasible=True, design=[1, 1, 1])
+    p = PolicyResult.from_dict(d)  # pre-bandwidth artifact: defaults apply
+    assert p.stall_cycles == 0.0 and p.bound == "compute"
+
+
+# ---------------------------------------------------------------------------
+# Traffic-model internals
+# ---------------------------------------------------------------------------
+
+def test_traffic_reuse_levels_monotone_in_sram():
+    # more SRAM can only reduce DRAM traffic (reuse is monotone)
+    last = None
+    for kib in (1e-3, 8, 64, 1024, np.inf):
+        tr = gemm_traffic_batched(
+            "dos", [512], [4096], [512], [64], [64], [4],
+            np.asarray(["tsv"]), BandwidthSpec(sram_kib_per_tier=kib),
+        )
+        if last is not None:
+            assert tr["dram_bytes"][0] <= last
+        last = float(tr["dram_bytes"][0])
+    # unbounded SRAM -> compulsory traffic only: A + B + 2-byte output
+    assert last == 512 * 4096 + 4096 * 512 + 512 * 512 * 2
+
+
+def test_roofline_cycles_combiner():
+    total, stall, idx = roofline_cycles([100.0, 100.0, 100.0],
+                                        [50.0, 200.0, 100.0],
+                                        [60.0, 150.0, 300.0])
+    np.testing.assert_array_equal(total, [100.0, 200.0, 300.0])
+    np.testing.assert_array_equal(stall, [0.0, 100.0, 200.0])
+    assert [BOUND_NAMES[i] for i in idx] == ["compute", "memory", "vlink"]
