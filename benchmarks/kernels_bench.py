@@ -4,10 +4,17 @@ Times the layer-facing ops that the models hot-path through, plus the
 cycle-level systolic simulator. Wall times here are CPU numbers — the
 TPU story lives in the roofline benchmark — but they track relative
 regressions and prove the ops run.
+
+Run:  PYTHONPATH=src python -m benchmarks.kernels_bench [--smoke]
+writes ``BENCH_kernels.json`` (``BENCH_kernels_smoke.json`` with
+``--smoke``: single-rep timings, same ops) next to this file.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import time
 
 import jax
@@ -20,6 +27,8 @@ from repro.kernels.flash_attention import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention_jnp
 from repro.kernels.ssm_scan import ssm_scan
 
+HERE = pathlib.Path(__file__).resolve().parent
+
 
 def _timeit(fn, *args, reps=3):
     out = fn(*args)
@@ -31,14 +40,14 @@ def _timeit(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def bench_kernels():
+def bench_kernels(reps: int = 3):
     rng = np.random.default_rng(0)
     rows = []
 
     a = jnp.asarray(rng.normal(size=(512, 2048)), jnp.bfloat16)
     b = jnp.asarray(rng.normal(size=(2048, 512)), jnp.bfloat16)
     f = jax.jit(lambda a, b: dos_matmul(a, b))
-    us = _timeit(f, a, b)
+    us = _timeit(f, a, b, reps=reps)
     gf = 2 * 512 * 2048 * 512 / (us / 1e6) / 1e9
     rows.append(("kernels/dos_matmul_512x2048x512_bf16", us, f"{gf:.1f} GFLOP/s cpu"))
 
@@ -46,11 +55,11 @@ def bench_kernels():
     k = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(1, 1024, 2, 64)), jnp.float32)
     f = jax.jit(lambda q, k, v: flash_attention_jnp(q, k, v, causal=True))
-    us = _timeit(f, q, k, v)
+    us = _timeit(f, q, k, v, reps=reps)
     rows.append(("kernels/flash_chunked_1k_gqa", us, "fwd"))
 
     f = jax.jit(jax.grad(lambda q, k, v: jnp.sum(flash_attention_jnp(q, k, v) ** 2)))
-    us = _timeit(f, q, k, v)
+    us = _timeit(f, q, k, v, reps=reps)
     rows.append(("kernels/flash_chunked_1k_bwd", us, "custom-vjp"))
 
     u = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.float32)
@@ -58,14 +67,14 @@ def bench_kernels():
     B = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.float32)
     C = jnp.asarray(rng.normal(size=(2, 1024, 8, 64)), jnp.float32)
     f = jax.jit(lambda *x: ssm_scan(*x)[0])
-    us = _timeit(f, u, ld, B, C)
+    us = _timeit(f, u, ld, B, C, reps=reps)
     rows.append(("kernels/ssd_scan_1k_8h", us, "chunk=128"))
 
     qd = jnp.asarray(rng.normal(size=(8, 1, 16, 64)), jnp.float32)
     kc = jnp.asarray(rng.normal(size=(8, 4096, 4, 64)), jnp.float32)
     vc = jnp.asarray(rng.normal(size=(8, 4096, 4, 64)), jnp.float32)
     f = jax.jit(lambda q, k, v: decode_attention(q, k, v, length=4000))
-    us = _timeit(f, qd, kc, vc)
+    us = _timeit(f, qd, kc, vc, reps=reps)
     rows.append(("kernels/decode_attn_b8_4k_cache", us, "einsum path"))
 
     A = jnp.asarray(rng.normal(size=(16, 96)), jnp.float32)
@@ -78,3 +87,25 @@ def bench_kernels():
 
 
 ALL = [bench_kernels]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-rep timings — the CI smoke step")
+    args = ap.parse_args()
+    rows = bench_kernels(reps=1 if args.smoke else 3)
+    out = {
+        "smoke": args.smoke,
+        "backend": jax.default_backend(),
+        "rows": [{"name": n, "us": us, "note": note} for n, us, note in rows],
+    }
+    name = "BENCH_kernels_smoke.json" if args.smoke else "BENCH_kernels.json"
+    (HERE / name).write_text(json.dumps(out, indent=1))
+    print(json.dumps(out, indent=1))
+    for n, us, note in rows:
+        print(f"{n:<45} {us:>12.1f} us  {note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -62,6 +62,43 @@ def _scalar_check(res, grid, spec: BandwidthSpec, n_sample: int = 64) -> None:
         assert stall[0] == res.stall_cycles[w, p], (w, p)
 
 
+def vlink_scenario():
+    """A sweep where the vertical-link bound actually binds.
+
+    The headline sweep's Fig-7-style workloads have K large enough that
+    every fold carries ~``ceil(K/L)`` compute cycles against ~15 cycles
+    of shared-TSV partial-sum drain, so ``bound_counts.vlink`` stays 0
+    there. Short-contraction (decode-like) GEMMs under tiny MAC budgets
+    at high tier counts flip that: the array comes out narrow, each
+    fold carries just a few MAC cycles, and the shared TSV bus drains
+    partial sums slower than the pile makes them. This study pins that
+    regime — the row asserts ``vlink > 0``.
+    """
+    study = Study(
+        name="roofline-bench-vlink",
+        workload=WorkloadSpec(
+            kind="gemms",
+            gemms=((64, 8, 64), (128, 16, 128), (256, 32, 256)),
+        ),
+        space=SpaceSpec(
+            mac_budgets=(64, 256),
+            tiers=(8, 16),
+            dataflow=("dos",),
+            tech=("tsv",),
+        ),
+        analysis=AnalysisSpec(kind="roofline", bandwidth=BandwidthSpec.paper_default()),
+    )
+    out = study.run()
+    counts = out.payload["bound_counts"]
+    assert counts["vlink"] > 0, f"vlink never binds: {counts}"
+    return {
+        "sweep": "3 short-K gemms x budgets (64,256) x tiers (8,16), dos/tsv",
+        "points": int(np.sum(out.result.valid)),
+        "bound_counts": counts,
+        "stall_frac": out.payload["stall_frac"],
+    }
+
+
 def run(n_workloads: int = 300, seed: int = 0):
     spec = BandwidthSpec.paper_default()
     study = Study(
@@ -102,6 +139,7 @@ def run(n_workloads: int = 300, seed: int = 0):
         "speedup_max_bw": float(np.nanmax(res.speedup)),
         "scalar_match": True,
         "uncapped_identity": True,
+        "vlink_scenario": vlink_scenario(),
     }
 
 
@@ -109,6 +147,7 @@ def bench_roofline():
     """benchmarks.run entry: small engine-backed roofline summary rows."""
     out = run(40)
     us = out["roofline_s"] * 1e6
+    vl = out["vlink_scenario"]
     return [
         ("roofline/engine_sweep", us,
          f"{out['points']} pts; bounds {out['bound_counts']}; "
@@ -116,6 +155,8 @@ def bench_roofline():
         ("roofline/speedup_collapse", 0.0,
          f"compute-bound {out['speedup_max_compute']:.2f}x -> "
          f"bw-aware {out['speedup_max_bw']:.2f}x"),
+        ("roofline/vlink_binds", 0.0,
+         f"short-K dos/tsv: bounds {vl['bound_counts']}"),
     ]
 
 

@@ -1,4 +1,4 @@
-"""Generate the §Dry-run, §Roofline, §DSE and §Network sections.
+"""Generate the §Dry-run, §Roofline, §DSE, §Network and §Search sections.
 
 Usage: PYTHONPATH=src python -m repro report            (the front door)
    or: PYTHONPATH=src python experiments/make_report.py [--sections ...]
@@ -286,13 +286,53 @@ def network_section(shapes=("train_4k", "prefill_32k", "decode_32k"), cache=None
     return "\n".join(lines) + "\n"
 
 
+def search_section(cache=None):
+    """Guided Pareto search demo: the example ``kind='search'`` study
+    (budgets x tiers x dataflow x tech x DRAM x SRAM grades) priced to
+    its cycles/energy frontier at a few-percent evaluated fraction —
+    the machinery `benchmarks/search_bench.py` scales to ~1e9 points."""
+    from repro.core.study import Study
+
+    out = Study.example("search").run(cache=cache)
+    p = out.payload
+    names = p["axis_names"]
+    axes = " x ".join(f"{n}({len(p['axes'][n])})" for n in names)
+    F = np.asarray(p["frontier_objectives"])
+    idx = np.unique(np.linspace(0, len(F) - 1, 10).astype(int))
+    lines = [
+        "### Guided Pareto search (kind='search')",
+        "",
+        out.describe(),
+        "",
+        f"Space: {axes}; deterministic for the spec's seed, resumable "
+        "per generation (`--cache`), multi-process (`--workers N`).",
+        "",
+        "| " + " | ".join(names) + " | " + " | ".join(p["objectives"]) + " |",
+        "|" + "---|" * (len(names) + len(p["objectives"])),
+    ]
+    for i in idx:
+        design = [f"{p['frontier_designs'][n][i]}" for n in names]
+        objs = [f"{v:.3e}" for v in F[i]]
+        lines.append("| " + " | ".join(design + objs) + " |")
+    lines.append(
+        f"\n{len(F)} frontier points; {len(idx)} shown (evenly sampled "
+        f"along the cycles-sorted frontier); hypervolume "
+        f"{p['hypervolume']:.4e} against ref {p['ref_point']}."
+    )
+    return "\n".join(lines) + "\n"
+
+
 def main(sections=None, cache=None):
     """Regenerate the requested sections (None = all). This is what
     ``python -m repro report`` drives. ``cache`` (a directory path)
     makes the live DSE/network studies chunk-cached: re-generating the
     report recomputes nothing that already ran — the sections come out
     bit-identical either way (chunking never changes results)."""
-    sections = set(sections) if sections else {"dryrun", "roofline", "dse", "network"}
+    sections = (
+        set(sections)
+        if sections
+        else {"dryrun", "roofline", "dse", "network", "search"}
+    )
     if cache is not None:
         from repro.core.cache import ResultCache
 
@@ -306,6 +346,8 @@ def main(sections=None, cache=None):
         (HERE / "dse_section.md").write_text(dse_section(cache=cache))
     if "network" in sections:
         (HERE / "network_section.md").write_text(network_section(cache=cache))
+    if "search" in sections:
+        (HERE / "search_section.md").write_text(search_section(cache=cache))
     if "roofline" not in sections:
         return
     # machine-readable summary for the hillclimb
@@ -334,5 +376,5 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="*", default=None,
-                    choices=["dryrun", "roofline", "dse", "network"])
+                    choices=["dryrun", "roofline", "dse", "network", "search"])
     main(sections=ap.parse_args().sections)

@@ -12,8 +12,9 @@ Subcommands:
   interrupted large-scale sweeps.
 - ``example-spec <kind>``: print a small runnable template spec for any
   analysis kind (evaluate | schedule | pareto | advise | sweep |
-  roofline) — ``python -m repro example-spec evaluate > spec.json``
-  then ``run`` it.
+  roofline | search) — ``python -m repro example-spec evaluate >
+  spec.json`` then ``run`` it. ``run --workers N`` farms a
+  ``kind='search'`` study's generation blocks to N worker processes.
 - ``report``: regenerate the ``experiments/`` report sections (the DSE
   and network tables are recomputed live through Study specs).
 - ``bench``: run the repo benchmarks (``--smoke`` for the CI subset);
@@ -28,6 +29,7 @@ anywhere the package is importable.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import importlib.util
 import json
 import os
@@ -38,7 +40,7 @@ import sys
 from .core.cache import DEFAULT_CACHE_DIR, ResultCache
 from .core.study import ANALYSIS_KINDS, Study
 
-_BENCHES = ("dse", "network", "study", "scale", "roofline")
+_BENCHES = ("dse", "network", "study", "scale", "roofline", "kernels", "search")
 
 
 def _find_repo_root() -> pathlib.Path:
@@ -100,6 +102,13 @@ def _cmd_run(args) -> int:
     except (ValueError, KeyError, TypeError, json.JSONDecodeError) as e:
         # TypeError covers misspelled spec fields (unexpected kwargs)
         raise SystemExit(f"error: invalid study spec {src}: {e}") from None
+    if args.workers is not None:
+        # an execution knob (never part of the cache key): override in
+        # place so --resume composes across worker counts
+        study = dataclasses.replace(
+            study,
+            analysis=dataclasses.replace(study.analysis, workers=args.workers),
+        )
     if cache is None and args.cache is not None:
         cache = ResultCache(args.cache or DEFAULT_CACHE_DIR)
     result = study.run(cache=cache)
@@ -175,6 +184,10 @@ def build_parser() -> argparse.ArgumentParser:
                      help="continue an interrupted cached run: DIR is the "
                           "cache root (single study) or one <spec-hash> "
                           "study directory; only missing chunks are computed")
+    run.add_argument("--workers", type=int, default=None, metavar="N",
+                     help="farm kind='search' generation blocks to N worker "
+                          "processes (overrides the spec's analysis.workers; "
+                          "results are bit-identical at any count)")
     run.set_defaults(fn=_cmd_run)
 
     ex = sub.add_parser("example-spec", help="print a runnable template spec")
@@ -184,7 +197,7 @@ def build_parser() -> argparse.ArgumentParser:
 
     rep = sub.add_parser("report", help="regenerate the experiments/ sections")
     rep.add_argument("--sections", nargs="*", default=None,
-                     choices=["dryrun", "roofline", "dse", "network"],
+                     choices=["dryrun", "roofline", "dse", "network", "search"],
                      help="subset to regenerate (default: all)")
     rep.add_argument("--cache", nargs="?", const="", default=None, metavar="DIR",
                      help="chunk-cache the live DSE/network studies "

@@ -235,11 +235,16 @@ def _ceil(a, b):
     return np.floor((a + b - 1.0) / b)
 
 
-def gemm_traffic_batched(dataflow: str, M, K, N, R, Cc, L, tech, spec: BandwidthSpec):
+def gemm_traffic_batched(dataflow: str, M, K, N, R, Cc, L, tech, spec: BandwidthSpec,
+                         sram_bytes=None):
     """Traffic + working set of a GEMM batch on (R, C, L) arrays.
 
     All array arguments are flat int arrays of one dataflow group (the
     engine splits per dataflow); ``tech`` is a parallel str array.
+    ``sram_bytes`` (optional) overrides ``spec.sram_bytes`` with a
+    parallel per-element capacity array [bytes] — the engine passes it
+    when the grid carries per-point SRAM axes (guided search over
+    memory systems); ``None`` keeps the spec's scalar capacity.
     Returns a dict of float64 arrays, per batch element:
 
     - ``dram_bytes``: total DRAM traffic [bytes] under the module's
@@ -255,7 +260,11 @@ def gemm_traffic_batched(dataflow: str, M, K, N, R, Cc, L, tech, spec: Bandwidth
     """
     M, K, N, R, Cc, L = (np.asarray(x, dtype=np.float64) for x in (M, K, N, R, Cc, L))
     bi, ba = float(spec.bytes_in), float(spec.bytes_acc)
-    sram = spec.sram_bytes
+    sram = (
+        spec.sram_bytes
+        if sram_bytes is None
+        else np.asarray(sram_bytes, dtype=np.float64)
+    )
     vbits = resolve_vlink_bits(spec, tech)
     zeros = np.zeros_like(M)
 

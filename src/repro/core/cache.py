@@ -43,11 +43,13 @@ DEFAULT_BLOCK_CELLS = 1 << 16
 
 #: spec fields that cannot change a result bit and therefore do not key
 #: the cache: ``name`` is cosmetic; backend ("identical integers"),
-#: chunk ("results are independent of it") and shard (rowwise-
-#: independent search) are execution knobs — an interrupted unsharded
-#: sweep can resume sharded without recomputing anything.
+#: chunk ("results are independent of it"), shard (rowwise-
+#: independent search) and workers (the work queue's chunk payloads
+#: are bit-identical across process counts) are execution knobs — an
+#: interrupted unsharded single-process sweep can resume sharded with
+#: eight workers without recomputing anything.
 _NON_CONTENT_TOP = ("name",)
-_NON_CONTENT_ANALYSIS = ("backend", "chunk", "shard")
+_NON_CONTENT_ANALYSIS = ("backend", "chunk", "shard", "workers")
 
 
 def study_hash(study) -> str:
@@ -111,6 +113,16 @@ class ResultCache:
                 return d
         self.misses += 1
         return None
+
+    def peek_chunk(self, study, key: str) -> dict | None:
+        """``load_chunk`` without touching the hit/miss counters — how
+        the work-queue parent collects chunks its workers just wrote
+        (counting those as hits would mask real resume accounting)."""
+        path = self.study_dir(study) / "chunks" / f"{key}.json"
+        try:
+            return json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
 
     def store_chunk(self, study, key: str, payload: dict) -> pathlib.Path:
         path = self.study_dir(study) / "chunks" / f"{key}.json"

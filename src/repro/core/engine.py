@@ -80,6 +80,7 @@ __all__ = [
     "thermal_feasible",
     "optimal_tiers_batched",
     "pareto_frontier",
+    "pareto_mask_batched",
     "score_mesh_strategies",
     "MESH_STRATEGIES",
     "ICI_HOP_LATENCY_S",
@@ -133,6 +134,13 @@ class DesignGrid:
     whole grid or a (P,) array ('os' is dOS at any tier count's l=1
     formulaic limit; at tiers > 1 'os' is treated as dOS). ``tech`` is
     '2d' | 'tsv' | 'miv', scalar or (P,).
+
+    ``dram_gbs`` / ``sram_kib`` (optional, scalar or (P,) float) make
+    the memory system itself a search axis: per-point DRAM bandwidth
+    [GB/s] and per-tier SRAM capacity [KiB]. They only take effect when
+    ``evaluate()`` runs with a ``BandwidthSpec`` — the per-point values
+    override the spec's scalar ``dram_gbs`` / ``sram_kib_per_tier`` —
+    and are ignored (with the spec's scalars used grid-wide) otherwise.
     """
 
     workloads: np.ndarray
@@ -143,6 +151,8 @@ class DesignGrid:
     dataflow: str | np.ndarray = "dos"
     tech: str | np.ndarray = "tsv"
     mode: str = "opt"
+    dram_gbs: np.ndarray | None = None
+    sram_kib: np.ndarray | None = None
 
     def __post_init__(self):
         validate_options("dataflow", self.dataflow, VALID_DATAFLOWS)
@@ -161,6 +171,13 @@ class DesignGrid:
             v = getattr(self, name)
             if v is not None:
                 per_point[name] = _as_1d_int(v)
+        for name in ("dram_gbs", "sram_kib"):
+            v = getattr(self, name)
+            if v is not None:
+                arr = np.atleast_1d(np.asarray(v, dtype=np.float64))
+                if not np.all(arr > 0):
+                    raise ValueError(f"{name} values must be > 0")
+                per_point[name] = arr
         for name in ("dataflow", "tech"):
             v = getattr(self, name)
             if not isinstance(v, str):
@@ -213,7 +230,7 @@ class DesignGrid:
         """
         kw: dict = {"workloads": self.workloads, "tiers": self.tiers[lo:hi],
                     "mode": self.mode}
-        for name in ("mac_budgets", "rows", "cols"):
+        for name in ("mac_budgets", "rows", "cols", "dram_gbs", "sram_kib"):
             v = getattr(self, name)
             if v is not None:
                 kw[name] = v[lo:hi]
@@ -225,7 +242,7 @@ class DesignGrid:
     def to_dict(self) -> dict:
         """JSON-compatible form; ``from_dict`` is the exact inverse."""
         out: dict = {"workloads": self.workloads.tolist()}
-        for name in ("tiers", "mac_budgets", "rows", "cols"):
+        for name in ("tiers", "mac_budgets", "rows", "cols", "dram_gbs", "sram_kib"):
             v = getattr(self, name)
             out[name] = None if v is None else np.asarray(v).tolist()
         for name in ("dataflow", "tech"):
@@ -237,7 +254,7 @@ class DesignGrid:
     @classmethod
     def from_dict(cls, d: dict) -> "DesignGrid":
         kw = {"workloads": d["workloads"], "tiers": d["tiers"], "mode": d.get("mode", "opt")}
-        for name in ("mac_budgets", "rows", "cols"):
+        for name in ("mac_budgets", "rows", "cols", "dram_gbs", "sram_kib"):
             if d.get(name) is not None:
                 kw[name] = d[name]
         for name in ("dataflow", "tech"):
@@ -408,7 +425,7 @@ class EvalResult:
             # frontier: blank them out before the scan (pareto_frontier
             # ignores non-finite rows entirely).
             stacked = np.where(self.feasible[..., None], stacked, np.inf)
-        return np.stack([pareto_frontier(row) for row in stacked])
+        return pareto_mask_batched(stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -758,27 +775,40 @@ def _evaluate_block(
         vl_b = np.zeros(W * P)
         sram_need = np.zeros(W * P)
         mem_cyc2 = np.zeros(W * P)
-        bpc = bandwidth.dram_bytes_per_cycle
+        # Per-point grid overrides (guided search over memory systems):
+        # scalars stay the scalar fast path, bit-identical to before.
+        if grid.dram_gbs is not None:
+            bpc = np.tile(grid.dram_gbs, W) * 1e9 / C.FREQ_HZ
+        else:
+            bpc = bandwidth.dram_bytes_per_cycle
+        if grid.sram_kib is not None:
+            sram_cap = np.tile(grid.sram_kib, W) * 1024.0
+        else:
+            sram_cap = bandwidth.sram_bytes
         tech2d = np.full(W * P, "2d")
         ones = np.ones(W * P, dtype=np.int64)
         for df in np.unique(dff):
             sel = np.nonzero(dff == df)[0]
+            sram_sel = None if grid.sram_kib is None else sram_cap[sel]
+            bpc_sel = bpc if np.isscalar(bpc) else bpc[sel]
             tr = gemm_traffic_batched(
                 str(df), Mf[sel], Kf[sel], Nf[sel],
                 rows[sel], cols[sel], Lf[sel], techf[sel], bandwidth,
+                sram_bytes=sram_sel,
             )
             dram_b[sel] = tr["dram_bytes"]
             vl_b[sel] = tr["vlink_bytes"]
             vl_cyc[sel] = tr["vlink_cycles"]
             sram_need[sel] = tr["sram_need_bytes"]
-            mem_cyc[sel] = tr["dram_bytes"] / bpc
+            mem_cyc[sel] = tr["dram_bytes"] / bpc_sel
             # Budget-matched 2D baseline under the same memory system
             # (its own searched shape; tech '2d' has no vertical links).
             tr2 = gemm_traffic_batched(
                 str(df), Mf[sel], Kf[sel], Nf[sel],
                 rows2d[sel], cols2d[sel], ones[sel], tech2d[sel], bandwidth,
+                sram_bytes=sram_sel,
             )
-            mem_cyc2[sel] = tr2["dram_bytes"] / bpc
+            mem_cyc2[sel] = tr2["dram_bytes"] / bpc_sel
         cycles, stall_flat, bidx = roofline_cycles(cycles, mem_cyc, vl_cyc)
         stall_flat = np.where(valid, stall_flat, np.nan)
         cycles_2d = np.maximum(cycles_2d, mem_cyc2)
@@ -790,7 +820,7 @@ def _evaluate_block(
             dram_bytes=dram_b.reshape(W, P),
             vlink_bytes=vl_b.reshape(W, P),
             sram_need_bytes=sram_need.reshape(W, P),
-            within_sram_capacity=(sram_need <= bandwidth.sram_bytes).reshape(W, P),
+            within_sram_capacity=(sram_need <= sram_cap).reshape(W, P),
         )
 
     with np.errstate(invalid="ignore", divide="ignore"):
@@ -1283,26 +1313,85 @@ def pareto_frontier(points, chunk: int = 2048) -> np.ndarray:
 
     ``points`` is (n, d); a row is on the frontier iff no other row is
     <= in every objective and < in at least one. Rows with non-finite
-    entries are never on the frontier. O(n^2) in ``chunk``-sized blocks.
+    entries are never on the frontier. The 2-objective case runs the
+    sort-based O(n log n) sweep; otherwise O(n^2) in ``chunk``-sized
+    blocks. Both paths are the single-workload case of
+    ``pareto_mask_batched`` (regression-pinned bit-identical to the
+    pre-vectorized scan by ``tests/test_engine.py``).
     """
     pts = np.atleast_2d(np.asarray(points, dtype=np.float64))
-    n = pts.shape[0]
-    finite = np.isfinite(pts).all(axis=1)
-    mask = np.zeros(n, dtype=bool)
-    cand = np.nonzero(finite)[0]
-    if cand.size == 0:
-        return mask
-    P = pts[cand]
-    dominated = np.zeros(cand.size, dtype=bool)
-    for lo in range(0, cand.size, chunk):
-        hi = min(lo + chunk, cand.size)
-        blk = P[lo:hi]  # (b, d)
-        dom = (P[None, :, :] <= blk[:, None, :]).all(-1) & (
-            P[None, :, :] < blk[:, None, :]
-        ).any(-1)
-        dominated[lo:hi] = dom.any(axis=1)
-    mask[cand[~dominated]] = True
+    return pareto_mask_batched(pts[None, :, :], chunk=chunk)[0]
+
+
+def _pareto_mask_2obj(pts: np.ndarray) -> np.ndarray:
+    """(W, n, 2) -> (W, n) frontier masks via per-row lexicographic
+    sort + prefix-min sweep — O(W n log n), no pairwise matrix.
+
+    A point is dominated iff (a) some point with strictly smaller x has
+    y <= its y (prefix min over earlier x-groups), or (b) a point with
+    the same x has strictly smaller y (within a group, sorted by y, the
+    group head holds the minimum). Ties on both coordinates keep every
+    copy, matching the pairwise scan's strict-< requirement.
+    """
+    W, n = pts.shape[:2]
+    finite = np.isfinite(pts).all(axis=-1)
+    q = np.where(finite[..., None], pts, np.inf)
+    x, y = q[..., 0], q[..., 1]
+    # Stable two-pass argsort == per-row lexsort by (x asc, then y asc).
+    o1 = np.argsort(y, axis=1, kind="stable")
+    o2 = np.argsort(np.take_along_axis(x, o1, axis=1), axis=1, kind="stable")
+    order = np.take_along_axis(o1, o2, axis=1)
+    X = np.take_along_axis(x, order, axis=1)
+    Y = np.take_along_axis(y, order, axis=1)
+    F = np.take_along_axis(finite, order, axis=1)
+    idx = np.arange(n)[None, :]
+    new_group = np.ones((W, n), dtype=bool)
+    new_group[:, 1:] = X[:, 1:] != X[:, :-1]
+    group_start = np.maximum.accumulate(np.where(new_group, idx, 0), axis=1)
+    # Exclusive prefix-min of Y, then snapped back to each group's
+    # start: the best y among points with strictly smaller x.
+    prev_min = np.full((W, n), np.inf)
+    if n > 1:
+        prev_min[:, 1:] = np.minimum.accumulate(Y, axis=1)[:, :-1]
+    best_before = np.take_along_axis(prev_min, group_start, axis=1)
+    y_head = np.take_along_axis(Y, group_start, axis=1)
+    dominated = (best_before <= Y) | ((idx > group_start) & (Y > y_head)) | ~F
+    mask = np.zeros((W, n), dtype=bool)
+    np.put_along_axis(mask, order, ~dominated, axis=1)
     return mask
+
+
+def pareto_mask_batched(points, chunk: int | None = None) -> np.ndarray:
+    """(W, n, d) -> (W, n) bool: per-workload Pareto frontiers in one
+    vectorized pass (all objectives minimized).
+
+    Rows with any non-finite entry are never on a frontier and never
+    dominate (they are lifted to +inf, and +inf <= finite is False).
+    d == 2 takes the O(n log n) sort sweep; the general case is the
+    chunked O(n^2) dominance scan with the workload axis batched in,
+    ``chunk`` bounding the (W, chunk, n) block size.
+    """
+    pts = np.asarray(points, dtype=np.float64)
+    if pts.ndim != 3:
+        raise ValueError(f"points must be (W, n, d), got shape {pts.shape}")
+    W, n, d = pts.shape
+    if n == 0:
+        return np.zeros((W, 0), dtype=bool)
+    if d == 2:
+        return _pareto_mask_2obj(pts)
+    finite = np.isfinite(pts).all(axis=-1)
+    q = np.where(finite[..., None], pts, np.inf)
+    if chunk is None:
+        chunk = 2048
+    b = max(1, min(chunk, _AUTO_STREAM_CELLS // max(W * n, 1) + 1))
+    dominated = np.zeros((W, n), dtype=bool)
+    for lo in range(0, n, b):
+        hi = min(lo + b, n)
+        blk = q[:, lo:hi, None, :]  # (W, b, 1, d)
+        allq = q[:, None, :, :]  # (W, 1, n, d)
+        dom = (allq <= blk).all(-1) & (allq < blk).any(-1)  # (W, b, n)
+        dominated[:, lo:hi] = dom.any(-1)
+    return finite & ~dominated
 
 
 # ---------------------------------------------------------------------------

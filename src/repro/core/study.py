@@ -65,6 +65,7 @@ from .params import (
     validate_options,
 )
 from .ppa import constants as C
+from .search import SearchSpec, run_search
 
 __all__ = [
     "ANALYSIS_KINDS",
@@ -74,6 +75,7 @@ __all__ = [
     "AnalysisSpec",
     "BandwidthSpec",
     "ConstraintSpec",
+    "SearchSpec",
     "SpaceSpec",
     "Study",
     "StudyResult",
@@ -84,7 +86,9 @@ __all__ = [
 SPEC_VERSION = 1
 
 WORKLOAD_KINDS = ("gemms", "network", "random")
-ANALYSIS_KINDS = ("evaluate", "schedule", "pareto", "advise", "sweep", "roofline")
+ANALYSIS_KINDS = (
+    "evaluate", "schedule", "pareto", "advise", "sweep", "roofline", "search",
+)
 SWEEP_FIGURES = ("fig5", "fig6", "fig7")
 
 
@@ -392,6 +396,13 @@ class AnalysisSpec:
     - ``'roofline'``: evaluate under the (required) ``bandwidth``
       memory system and classify every design point as compute- /
       memory- / vlink-bound, with the stall breakdown in the payload.
+    - ``'search'``: guided Pareto search (``core.search``) over the
+      space's axes (plus the ``search`` spec's optional memory-system
+      axes) — successive halving + evolutionary proposals, one engine
+      batch per generation; needs a ``search`` ``SearchSpec``.
+      ``workers`` (an execution knob, like backend/chunk/shard: never
+      part of the cache key) farms each generation's missing cache
+      blocks to N worker processes (``parallel.work_queue``).
 
     ``bandwidth`` (a ``core.bandwidth.BandwidthSpec`` or its dict
     form) attaches the bandwidth-aware runtime model to ANY kind:
@@ -417,11 +428,38 @@ class AnalysisSpec:
     mac_budget: int | None = None
     figure: str | None = None
     bandwidth: BandwidthSpec | dict | None = None
+    search: SearchSpec | dict | None = None
+    workers: int | None = None
     params: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         validate_option("analysis kind", self.kind, ANALYSIS_KINDS)
         validate_option("backend", self.backend, VALID_BACKENDS)
+        if self.search is not None and not isinstance(self.search, SearchSpec):
+            if not isinstance(self.search, dict):
+                raise ValueError(
+                    f"search must be a SearchSpec or dict, "
+                    f"got {type(self.search).__name__}"
+                )
+            object.__setattr__(self, "search", SearchSpec.from_dict(self.search))
+        if self.kind == "search":
+            if self.search is None:
+                raise ValueError(
+                    "kind='search' needs a search= SearchSpec (objectives, "
+                    "generations, population, refinement schedule, seed)"
+                )
+            if self.bandwidth is None and (
+                self.search.dram_gbs is not None or self.search.sram_kib is not None
+            ):
+                raise ValueError(
+                    "the search's dram_gbs/sram_kib memory-system axes need "
+                    "a bandwidth= spec (the model they parameterize)"
+                )
+        if self.workers is not None:
+            n = int(self.workers)
+            if n < 1:
+                raise ValueError(f"workers must be >= 1, got {self.workers}")
+            object.__setattr__(self, "workers", n)
         if self.bandwidth is not None and not isinstance(self.bandwidth, BandwidthSpec):
             if not isinstance(self.bandwidth, dict):
                 raise ValueError(
@@ -665,6 +703,13 @@ class Study:
         payload["stall_frac"] = stall_total / cycles_total if cycles_total else 0.0
         return payload
 
+    def _run_search(self, stream, cache: ResultCache | None = None) -> dict:
+        """Guided Pareto search (see ``core.search``): each generation is
+        one vectorized engine batch and one set of cache chunks, so
+        ``--resume`` replays finished generations bit-for-bit and
+        ``analysis.workers`` farms missing blocks to N processes."""
+        return run_search(self, stream, cache=cache)
+
     def _run_pareto(self, stream, cache: ResultCache | None = None) -> dict:
         payload = self._run_evaluate(stream, cache=cache)
         res, mask = payload["result"], payload["constraint_mask"]
@@ -878,6 +923,30 @@ class Study:
                     kind="roofline", bandwidth=BandwidthSpec.paper_default()
                 ),
             )
+        if kind == "search":
+            return cls(
+                name="example-search",
+                workload=WorkloadSpec(kind="gemms", gemms=gemms),
+                space=SpaceSpec(
+                    mac_budgets=tuple(2**k for k in range(10, 19)),
+                    tiers=tuple(range(1, 9)),
+                    dataflow=("dos", "ws"),
+                    tech=("tsv", "miv"),
+                ),
+                analysis=AnalysisSpec(
+                    kind="search",
+                    bandwidth=BandwidthSpec.paper_default(),
+                    search=SearchSpec(
+                        objectives=("cycles", "energy_j"),
+                        generations=4,
+                        population=64,
+                        refine=(4, 2, 1),
+                        seed=0,
+                        dram_gbs=(64.0, 128.0, 256.0, 512.0),
+                        sram_kib=(256.0, 512.0, 1024.0),
+                    ),
+                ),
+            )
         return cls(
             name=f"example-{kind}",
             workload=WorkloadSpec(kind="gemms", gemms=gemms),
@@ -904,6 +973,8 @@ def _restore_payload(kind: str, payload: dict) -> dict:
         ("speedup", np.float64),
         ("best_cycles", np.float64),
         ("optimal_tiers", np.int64),
+        ("frontier_candidates", np.int64),
+        ("frontier_objectives", np.float64),
     ):
         if key in out and not isinstance(out[key], np.ndarray):
             out[key] = np.asarray(out[key], dtype=dt)
@@ -987,6 +1058,15 @@ class StudyResult:
     def describe(self) -> str:
         """One-line human summary (what the CLI prints)."""
         name = self.study.name or "<unnamed>"
+        if self.kind == "search":
+            p = self.payload
+            return (
+                f"{name}: search {p['n_evaluated']:,}/{p['space_size']:,} "
+                f"points ({p['frac_evaluated']:.3%}) over "
+                f"{p['generations']} generations — "
+                f"{len(p['frontier_objectives'])} on the feasible frontier, "
+                f"hypervolume {p['hypervolume']:.4e}"
+            )
         if self.kind == "roofline":
             W, P = self.result.valid.shape
             bc = self.payload["bound_counts"]

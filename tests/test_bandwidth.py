@@ -147,6 +147,52 @@ def test_vlink_bound_tsv_vs_miv_pinned():
     assert tsv.cycles[0, 0] > miv.cycles[0, 0]
 
 
+def test_vlink_binds_through_array_search_pinned():
+    """The vlink bound survives the engine's own (R, C) search.
+
+    Narrow-TSV/high-tier regime: a 64-MAC budget spread over 8 tiers
+    forces tiny per-tier arrays, and the short contraction (K = 8,
+    Kt = 1) leaves each dOS fold only ~12 compute cycles against the
+    shared TSV bus's ~15-cycle partial-sum drain — the best design the
+    search can find is vlink-bound. Same budget on MIV (full-width bus
+    per pile) is compute-bound at the same (2, 4) shape, pinning that
+    the technology choice alone flips the binding resource.
+    """
+    spec = BandwidthSpec.paper_default()
+    tsv = evaluate(
+        DesignGrid.product([(64, 8, 64)], (64,), (8,), dataflow="dos", tech="tsv"),
+        bandwidth=spec,
+    )
+    miv = evaluate(
+        DesignGrid.product([(64, 8, 64)], (64,), (8,), dataflow="dos", tech="miv"),
+        bandwidth=spec,
+    )
+    assert tsv.valid[0, 0] and miv.valid[0, 0]
+    assert tsv.bound[0, 0] == "vlink"
+    assert (int(tsv.rows[0, 0]), int(tsv.cols[0, 0])) == (2, 4)
+    # ceil(64/2) * ceil(64/4) = 512 folds x 16 B plane / (8 MACs * 17/16 b / 8)
+    np.testing.assert_allclose(tsv.cycles[0, 0], 512 * 16 * 16 / 17)
+    assert tsv.stall_cycles[0, 0] == pytest.approx(512 * 16 * 16 / 17 - 7168.0)
+    assert miv.bound[0, 0] == "compute"
+    assert miv.cycles[0, 0] == 7168.0
+    assert float(np.nansum(miv.stall_cycles)) == 0.0
+
+
+def test_vlink_bound_counts_in_roofline_study():
+    """`bound_counts.vlink > 0` end-to-end: the kind='roofline' payload
+    (the BENCH_roofline vlink-scenario row) reports vlink-bound points
+    under the same narrow-budget/high-tier space."""
+    study = Study(
+        workload=WorkloadSpec(kind="gemms", gemms=((64, 8, 64), (128, 16, 128))),
+        space=SpaceSpec(mac_budgets=(64, 256), tiers=(8, 16),
+                        dataflow=("dos",), tech=("tsv",)),
+        analysis=AnalysisSpec(kind="roofline", bandwidth=BandwidthSpec.paper_default()),
+    )
+    counts = study.run().payload["bound_counts"]
+    assert counts["vlink"] > 0
+    assert counts["compute"] > 0  # regime boundary inside the space
+
+
 def test_resolve_vlink_bits_derived():
     spec = BandwidthSpec(vlink_bits_per_mac="derived")
     bits = resolve_vlink_bits(spec, np.array(["2d", "tsv", "miv"]))

@@ -26,6 +26,7 @@ from repro.core.engine import (
     evaluate,
     optimal_tiers_batched,
     pareto_frontier,
+    pareto_mask_batched,
 )
 
 WORKLOADS = [(64, 12100, 147), (512, 784, 128), (35, 2560, 4096), (7, 33, 9)]
@@ -284,6 +285,66 @@ def test_pareto_frontier_basic():
     )
     mask = pareto_frontier(pts)
     assert mask.tolist() == [True, True, False, False, True, False]
+
+
+def _pareto_reference(pts):
+    """The pre-vectorization O(n^2) per-point scan — semantics oracle."""
+    pts = np.asarray(pts, dtype=np.float64)
+    n = len(pts)
+    finite = np.isfinite(pts).all(axis=1)
+    mask = np.zeros(n, dtype=bool)
+    for i in range(n):
+        if not finite[i]:
+            continue
+        dominated = False
+        for j in range(n):
+            if j == i or not finite[j]:
+                continue
+            if np.all(pts[j] <= pts[i]) and np.any(pts[j] < pts[i]):
+                dominated = True
+                break
+        mask[i] = not dominated
+    return mask
+
+
+@pytest.mark.parametrize("d", [1, 2, 3, 4])
+def test_pareto_mask_batched_matches_reference(d):
+    """Bit-identity of the vectorized batched pass (and the sort-based
+    2-objective fast path at d == 2) against the O(n^2) oracle, over
+    clouds with ties, duplicate rows and non-finite values."""
+    rng = np.random.default_rng(d)
+    for trial in range(8):
+        W, n = int(rng.integers(1, 4)), int(rng.integers(1, 120))
+        # coarse integer grid => plenty of exact ties and duplicates
+        pts = rng.integers(0, 6, size=(W, n, d)).astype(np.float64)
+        if trial % 2:
+            bad = rng.random((W, n)) < 0.15
+            pts[bad, rng.integers(0, d)] = [np.inf, np.nan][trial % 4 == 1]
+        got = pareto_mask_batched(pts)
+        want = np.stack([_pareto_reference(pts[w]) for w in range(W)])
+        np.testing.assert_array_equal(got, want, err_msg=f"trial {trial}")
+        if d == 2:
+            for w in range(W):
+                np.testing.assert_array_equal(pareto_frontier(pts[w]), want[w])
+
+
+def test_pareto_frontier_chunked_identical():
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(2, 3000, 3))
+    full = pareto_mask_batched(pts)
+    np.testing.assert_array_equal(pareto_mask_batched(pts, chunk=17), full)
+
+
+def test_pareto_2obj_fast_path_matches_general():
+    """Lifting 2-obj points with a constant third column leaves the
+    dominance relation unchanged, so the O(n log n) sweep must agree
+    with the general O(n^2) scan on large tied clouds."""
+    rng = np.random.default_rng(1)
+    pts = np.round(rng.normal(size=(3, 4000, 2)), 1)  # heavy ties
+    lifted = np.concatenate([pts, np.zeros_like(pts[..., :1])], axis=-1)
+    np.testing.assert_array_equal(
+        pareto_mask_batched(pts), pareto_mask_batched(lifted)
+    )
 
 
 def test_pareto_mask_on_grid():

@@ -152,7 +152,9 @@ def _payload_json(res: StudyResult) -> str:
     return json.dumps(res.to_dict()["payload"], sort_keys=True)
 
 
-@pytest.mark.parametrize("kind", ["evaluate", "pareto", "schedule", "advise", "sweep"])
+@pytest.mark.parametrize(
+    "kind", ["evaluate", "pareto", "schedule", "advise", "sweep", "search"]
+)
 def test_cached_run_is_bit_identical(kind, tmp_path):
     study = Study.example(kind)
     plain = study.run()
