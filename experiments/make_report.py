@@ -1,4 +1,5 @@
-"""Generate the §Dry-run, §Roofline, §DSE, §Network and §Search sections.
+"""Generate the §Dry-run, §Roofline, §DSE, §Network, §Search and
+§Calibrate sections.
 
 Usage: PYTHONPATH=src python -m repro report            (the front door)
    or: PYTHONPATH=src python experiments/make_report.py [--sections ...]
@@ -322,6 +323,45 @@ def search_section(cache=None):
     return "\n".join(lines) + "\n"
 
 
+def calibrate_section(cache=None):
+    """Measured-model calibration: the example ``kind='calibrate'``
+    study (smoke grid — the full grid is ``preset='default'`` via
+    ``benchmarks/calibrate_bench.py``) measured on this machine's
+    backend and fitted to the roofline; the table is per-shape
+    measured vs modeled time. Wall times are backend-local, so this
+    section is honest about *where* it ran."""
+    import jax
+
+    from repro.core.study import Study
+
+    out = Study.example("calibrate").run(cache=cache)
+    p = out.payload
+    e = p["errors"]
+    lines = [
+        "### Calibrated roofline (kind='calibrate')",
+        "",
+        out.describe(),
+        "",
+        f"Backend: `{jax.default_backend()}`. Fitted DRAM "
+        f"{p['dram_gbs_fitted']:.2f} GB/s; holdout median relative error "
+        f"{e['holdout_median_rel_err']:.1%} vs "
+        f"{e['uncalibrated_holdout_median_rel_err']:.1%} for the "
+        "uncalibrated nominal constants. The `artifact` in the study "
+        "payload is a `CalibratedBandwidth` any other study accepts via "
+        "`bandwidth=`.",
+        "",
+        "| shape | t measured | t model | rel err | GFLOP/s | GB/s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in p["rows"]:
+        lines.append(
+            f"| {r['label']} | {r['t_s']*1e3:.2f} ms | {r['pred_s']*1e3:.2f} ms "
+            f"| {r['rel_err']:.1%} | {r['achieved_gflops']:.1f} "
+            f"| {r['achieved_gbs']:.2f} |"
+        )
+    return "\n".join(lines) + "\n"
+
+
 def main(sections=None, cache=None):
     """Regenerate the requested sections (None = all). This is what
     ``python -m repro report`` drives. ``cache`` (a directory path)
@@ -331,7 +371,7 @@ def main(sections=None, cache=None):
     sections = (
         set(sections)
         if sections
-        else {"dryrun", "roofline", "dse", "network", "search"}
+        else {"dryrun", "roofline", "dse", "network", "search", "calibrate"}
     )
     if cache is not None:
         from repro.core.cache import ResultCache
@@ -348,6 +388,8 @@ def main(sections=None, cache=None):
         (HERE / "network_section.md").write_text(network_section(cache=cache))
     if "search" in sections:
         (HERE / "search_section.md").write_text(search_section(cache=cache))
+    if "calibrate" in sections:
+        (HERE / "calibrate_section.md").write_text(calibrate_section(cache=cache))
     if "roofline" not in sections:
         return
     # machine-readable summary for the hillclimb
@@ -376,5 +418,6 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="*", default=None,
-                    choices=["dryrun", "roofline", "dse", "network", "search"])
+                    choices=["dryrun", "roofline", "dse", "network", "search",
+                             "calibrate"])
     main(sections=ap.parse_args().sections)

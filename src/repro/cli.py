@@ -12,8 +12,8 @@ Subcommands:
   interrupted large-scale sweeps.
 - ``example-spec <kind>``: print a small runnable template spec for any
   analysis kind (evaluate | schedule | pareto | advise | sweep |
-  roofline | search) — ``python -m repro example-spec evaluate >
-  spec.json`` then ``run`` it. ``run --workers N`` farms a
+  roofline | search | calibrate) — ``python -m repro example-spec
+  evaluate > spec.json`` then ``run`` it. ``run --workers N`` farms a
   ``kind='search'`` study's generation blocks to N worker processes.
 - ``report``: regenerate the ``experiments/`` report sections (the DSE
   and network tables are recomputed live through Study specs).
@@ -40,7 +40,10 @@ import sys
 from .core.cache import DEFAULT_CACHE_DIR, ResultCache
 from .core.study import ANALYSIS_KINDS, Study
 
-_BENCHES = ("dse", "network", "study", "scale", "roofline", "kernels", "search")
+_BENCHES = (
+    "dse", "network", "study", "scale", "roofline", "kernels", "search",
+    "calibrate",
+)
 
 
 def _find_repo_root() -> pathlib.Path:
@@ -197,7 +200,8 @@ def build_parser() -> argparse.ArgumentParser:
 
     rep = sub.add_parser("report", help="regenerate the experiments/ sections")
     rep.add_argument("--sections", nargs="*", default=None,
-                     choices=["dryrun", "roofline", "dse", "network", "search"],
+                     choices=["dryrun", "roofline", "dse", "network", "search",
+                              "calibrate"],
                      help="subset to regenerate (default: all)")
     rep.add_argument("--cache", nargs="?", const="", default=None, metavar="DIR",
                      help="chunk-cache the live DSE/network studies "

@@ -42,8 +42,10 @@ import pathlib
 
 import numpy as np
 
+from . import calibrate as _calibrate
 from .bandwidth import BOUND_NAMES, BandwidthSpec
 from .cache import ResultCache
+from .calibrate import CalibrateSpec, CalibratedBandwidth
 from .engine import (
     MESH_STRATEGIES,
     DesignGrid,
@@ -74,6 +76,8 @@ __all__ = [
     "WORKLOAD_KINDS",
     "AnalysisSpec",
     "BandwidthSpec",
+    "CalibrateSpec",
+    "CalibratedBandwidth",
     "ConstraintSpec",
     "SearchSpec",
     "SpaceSpec",
@@ -88,6 +92,7 @@ SPEC_VERSION = 1
 WORKLOAD_KINDS = ("gemms", "network", "random")
 ANALYSIS_KINDS = (
     "evaluate", "schedule", "pareto", "advise", "sweep", "roofline", "search",
+    "calibrate",
 )
 SWEEP_FIGURES = ("fig5", "fig6", "fig7")
 
@@ -403,6 +408,13 @@ class AnalysisSpec:
       ``workers`` (an execution knob, like backend/chunk/shard: never
       part of the cache key) farms each generation's missing cache
       blocks to N worker processes (``parallel.work_queue``).
+    - ``'calibrate'``: measure the real kernels over ``calibrate``'s
+      (a ``core.calibrate.CalibrateSpec``, defaulted when omitted)
+      shape grid and fit the roofline model to the timings; the
+      payload's ``artifact`` is a ``CalibratedBandwidth`` any other
+      study accepts via ``bandwidth=``. The workload spec is ignored
+      (the "workload" IS the calibration grid); each measured shape is
+      one cache chunk, so ``--resume`` replays finished shapes.
 
     ``bandwidth`` (a ``core.bandwidth.BandwidthSpec`` or its dict
     form) attaches the bandwidth-aware runtime model to ANY kind:
@@ -429,6 +441,7 @@ class AnalysisSpec:
     figure: str | None = None
     bandwidth: BandwidthSpec | dict | None = None
     search: SearchSpec | dict | None = None
+    calibrate: CalibrateSpec | dict | None = None
     workers: int | None = None
     params: dict = dataclasses.field(default_factory=dict)
 
@@ -455,20 +468,41 @@ class AnalysisSpec:
                     "the search's dram_gbs/sram_kib memory-system axes need "
                     "a bandwidth= spec (the model they parameterize)"
                 )
+        if self.calibrate is not None and not isinstance(self.calibrate, CalibrateSpec):
+            if not isinstance(self.calibrate, dict):
+                raise ValueError(
+                    f"calibrate must be a CalibrateSpec or dict, "
+                    f"got {type(self.calibrate).__name__}"
+                )
+            object.__setattr__(
+                self, "calibrate", CalibrateSpec.from_dict(self.calibrate)
+            )
+        if self.kind == "calibrate" and self.calibrate is None:
+            object.__setattr__(self, "calibrate", CalibrateSpec())
         if self.workers is not None:
             n = int(self.workers)
             if n < 1:
                 raise ValueError(f"workers must be >= 1, got {self.workers}")
             object.__setattr__(self, "workers", n)
         if self.bandwidth is not None and not isinstance(self.bandwidth, BandwidthSpec):
-            if not isinstance(self.bandwidth, dict):
+            # A CalibratedBandwidth (or its dict form — recognizable by
+            # the embedded spec + efficiency/marker keys) unwraps to its
+            # fitted BandwidthSpec here, so a measured artifact plugs
+            # into any study exactly where an assumed spec would go —
+            # and reloading the spec from JSON normalizes identically.
+            bw = self.bandwidth
+            if isinstance(bw, dict) and ("calibrated" in bw or
+                                         ("bandwidth" in bw and "efficiency" in bw)):
+                bw = CalibratedBandwidth.from_dict(bw)
+            if isinstance(bw, CalibratedBandwidth):
+                object.__setattr__(self, "bandwidth", bw.bandwidth)
+            elif not isinstance(bw, dict):
                 raise ValueError(
-                    f"bandwidth must be a BandwidthSpec or dict, "
-                    f"got {type(self.bandwidth).__name__}"
+                    f"bandwidth must be a BandwidthSpec, CalibratedBandwidth "
+                    f"or dict, got {type(bw).__name__}"
                 )
-            object.__setattr__(
-                self, "bandwidth", BandwidthSpec.from_dict(self.bandwidth)
-            )
+            else:
+                object.__setattr__(self, "bandwidth", BandwidthSpec.from_dict(bw))
         if self.kind == "roofline" and self.bandwidth is None:
             raise ValueError(
                 "kind='roofline' needs a bandwidth= spec — the memory system "
@@ -710,6 +744,28 @@ class Study:
         ``analysis.workers`` farms missing blocks to N processes."""
         return run_search(self, stream, cache=cache)
 
+    def _run_calibrate(self, stream, cache: ResultCache | None = None) -> dict:
+        """Measure + fit (see ``core.calibrate``). The workload stream
+        is unused — the calibration grid is the workload. Each measured
+        shape is one cache chunk (keyed by index + label), so an
+        interrupted sweep resumes at the first unmeasured shape; the
+        fit is deterministic given the measured rows, so a fully-cached
+        re-run reproduces the artifact bit-for-bit."""
+        del stream
+        spec = self.analysis.calibrate
+        measured = []
+        for i, row in enumerate(_calibrate.shape_grid(spec)):
+            key = f"shape-{i:04d}-{row['label']}"
+            d = cache.load_chunk(self, key) if cache is not None else None
+            if d is None:
+                d = _calibrate.measure_row(
+                    row, reps=spec.reps, warmup=spec.warmup, seed=spec.seed
+                )
+                if cache is not None:
+                    cache.store_chunk(self, key, _jsonify(d))
+            measured.append(d)
+        return _calibrate.fit_rows(measured, spec)
+
     def _run_pareto(self, stream, cache: ResultCache | None = None) -> dict:
         payload = self._run_evaluate(stream, cache=cache)
         res, mask = payload["result"], payload["constraint_mask"]
@@ -923,6 +979,18 @@ class Study:
                     kind="roofline", bandwidth=BandwidthSpec.paper_default()
                 ),
             )
+        if kind == "calibrate":
+            # the workload is a placeholder (calibrate ignores it —
+            # the shape grid is the workload); smoke preset + low reps
+            # keep the example in CI-seconds territory.
+            return cls(
+                name="example-calibrate",
+                workload=WorkloadSpec(kind="gemms", gemms=gemms),
+                analysis=AnalysisSpec(
+                    kind="calibrate",
+                    calibrate=CalibrateSpec(preset="smoke", reps=2, warmup=1),
+                ),
+            )
         if kind == "search":
             return cls(
                 name="example-search",
@@ -980,6 +1048,8 @@ def _restore_payload(kind: str, payload: dict) -> dict:
             out[key] = np.asarray(out[key], dtype=dt)
     if kind == "advise" and not isinstance(out.get("names"), np.ndarray):
         out["names"] = np.asarray(out["names"])
+    if kind == "calibrate" and isinstance(out.get("artifact"), dict):
+        out["artifact"] = CalibratedBandwidth.from_dict(out["artifact"])
     return out
 
 
@@ -1066,6 +1136,18 @@ class StudyResult:
                 f"{p['generations']} generations — "
                 f"{len(p['frontier_objectives'])} on the feasible frontier, "
                 f"hypervolume {p['hypervolume']:.4e}"
+            )
+        if self.kind == "calibrate":
+            p = self.payload
+            e = p["errors"]
+            eff = ", ".join(
+                f"{k}: {v:.2%}" for k, v in sorted(p["efficiency"].items())
+            )
+            return (
+                f"{name}: calibrate {len(p['rows'])} shapes — "
+                f"dram {p['dram_gbs_fitted']:.2f} GB/s, efficiency {eff}; "
+                f"holdout err {e['holdout_median_rel_err']:.1%} "
+                f"(uncalibrated {e['uncalibrated_holdout_median_rel_err']:.1%})"
             )
         if self.kind == "roofline":
             W, P = self.result.valid.shape

@@ -20,19 +20,41 @@ from .ref import dos_matmul_ref, matmul_ref
 __all__ = ["dos_matmul", "pick_blocks"]
 
 
+# Minimum Pallas tile (sublane, lane) for f32; shapes below this are
+# dominated by zero padding and dispatch to the reference GEMM instead.
+MIN_TILE_M = 8
+MIN_TILE_N = 128
+MIN_TILE_K = 128
+
+
 def pick_blocks(m: int, n: int, k: int, vmem_budget_bytes: int = 8 * 2**20):
     """MXU-aligned block sizes fitting the VMEM budget.
 
     Working set (bf16 operands + f32 acc): 2(bm*bk + bk*bn) + 4*bm*bn.
     Prefers 128-aligned bm/bn and a deep K block (dOS wants as much of
     the contraction resident as possible: fewer "tier" iterations).
+    Skewed (tall/wide) GEMMs get rectangular tiles: when one output dim
+    is small, its freed VMEM goes to the other dim — fewer grid rows
+    and better reuse of the small operand — instead of sitting idle.
     """
-    bm = min(128, _round_up(m, 8))
-    bn = min(128, _round_up(n, 128))
+
+    def fits(bm_, bn_, bk_):
+        return 2 * (bm_ * bk_ + bk_ * bn_) + 4 * bm_ * bn_ <= vmem_budget_bytes
+
+    bm = min(128, _round_up(m, MIN_TILE_M))
+    bn = min(128, _round_up(n, MIN_TILE_N))
+    if n <= 128 < m:  # tall: grow bm while the min-depth K block fits
+        while bm < 512 and bm < _round_up(m, MIN_TILE_M) and fits(2 * bm, bn, MIN_TILE_K):
+            bm *= 2
+        bm = min(bm, _round_up(m, MIN_TILE_M))
+    elif m <= 128 < n:  # wide: grow bn symmetrically
+        while bn < 512 and bn < _round_up(n, MIN_TILE_N) and fits(bm, 2 * bn, MIN_TILE_K):
+            bn *= 2
+        bn = min(bn, _round_up(n, MIN_TILE_N))
     bk = 512
-    while 2 * (bm * bk + bk * bn) + 4 * bm * bn > vmem_budget_bytes and bk > 128:
+    while not fits(bm, bn, bk) and bk > MIN_TILE_K:
         bk //= 2
-    return bm, bn, min(bk, _round_up(k, 128))
+    return bm, bn, min(bk, _round_up(k, MIN_TILE_K))
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -74,6 +96,13 @@ def dos_matmul(
         m *= d
     k = a.shape[-1]
     n = b.shape[-1]
+
+    # Degenerate shapes (any dim below the minimum tile): the padded
+    # kernel would spend most of its FLOPs on zeros — use the reference
+    # GEMM, which XLA handles without padding waste.
+    if m < MIN_TILE_M or n < MIN_TILE_N or k < MIN_TILE_K:
+        return matmul_ref(a, b, out_dtype)
+
     a2 = a.reshape(m, k)
 
     bm, bn, bk = blocks or pick_blocks(m, n, k)

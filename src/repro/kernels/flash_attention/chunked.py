@@ -15,8 +15,11 @@ block (flash-2):
     dS   = p * (dO V_j^T - D_i) * scale
     dQ_i += dS K_j ;  dK_j += dS^T Q_i
 
-Layout is (B, H, S, D) with heads already expanded — GQA is handled by
-the caller via jnp.repeat, whose VJP sums group gradients automatically.
+Layout is grouped for GQA: q is (B, KVH, G, Sq, D) and k/v are
+(B, KVH, Skv, D), so each KV head is contracted against its G query
+heads directly inside the einsums — no ``jnp.repeat`` materializing g×
+copies of K/V per chunk. The backward's dK/dV einsums sum over G, which
+is exactly the group-gradient reduction the repeat VJP used to do.
 ``window`` is a traced f32 scalar (+inf = global) so per-layer scanned
 metadata works; its cotangent is zero.
 """
@@ -43,16 +46,21 @@ def _mask(qi, kj, causal: bool, window):
     return ok
 
 
-def _fwd_impl(q, k, v, window, causal, scale, q_offset, chunk, unroll=False):
-    b, h, sq, d = q.shape
-    skv = k.shape[2]
+def _chunk_kv(k, chunk):
+    """(B,KVH,Skv,D) -> (nkv, B,KVH,chunk,D) with zero tail padding."""
+    b, kvh, skv, d = k.shape
     nkv = -(-skv // chunk)
     pad = nkv * chunk - skv
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    kc = k.reshape(b, h, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
-    vc = v.reshape(b, h, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
+    return k.reshape(b, kvh, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
+
+
+def _fwd_impl(q, k, v, window, causal, scale, q_offset, chunk, unroll=False):
+    b, kvh, g, sq, d = q.shape
+    skv = k.shape[2]
+    kc = _chunk_kv(k, chunk)
+    vc = _chunk_kv(v, chunk)
 
     qf = q.astype(jnp.float32) * scale
     qi = jnp.arange(sq) + q_offset
@@ -60,16 +68,16 @@ def _fwd_impl(q, k, v, window, causal, scale, q_offset, chunk, unroll=False):
     def step(carry, inp):
         m, l, acc, j = carry
         k_j, v_j = inp
-        s = jnp.einsum("bhqd,bhcd->bhqc", qf, k_j.astype(jnp.float32))
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qf, k_j.astype(jnp.float32))
         kj = j * chunk + jnp.arange(chunk)
         ok = _mask(qi, kj, causal, window) & (kj < skv)[None, :]
-        s = jnp.where(ok[None, None], s, NEG_INF)
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l = l * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
-            "bhqc,bhcd->bhqd", p, v_j.astype(jnp.float32)
+            "bkgqc,bkcd->bkgqd", p, v_j.astype(jnp.float32)
         )
         return (m_new, l, acc, j + 1), None
 
@@ -90,8 +98,8 @@ def _fwd_impl(q, k, v, window, causal, scale, q_offset, chunk, unroll=False):
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
 def flash_core(q, k, v, window, causal: bool, scale: float, q_offset: int,
                chunk: int, unroll: bool = False):
-    """q: (B,H,Sq,D); k, v: (B,H,Skv,D); window: f32 scalar (inf=global).
-    Returns o: (B,H,Sq,D)."""
+    """q: (B,KVH,G,Sq,D); k, v: (B,KVH,Skv,D); window: f32 scalar
+    (inf=global). Returns o: (B,KVH,G,Sq,D)."""
     o, _ = _fwd_impl(q, k, v, window, causal, scale, q_offset, chunk, unroll)
     return o
 
@@ -103,42 +111,39 @@ def _fwd_rule(q, k, v, window, causal, scale, q_offset, chunk, unroll=False):
 
 def _bwd_rule(causal, scale, q_offset, chunk, unroll, res, do):
     q, k, v, window, o, lse = res
-    b, h, sq, d = q.shape
+    b, kvh, g, sq, d = q.shape
     skv = k.shape[2]
     nkv = -(-skv // chunk)
-    pad = nkv * chunk - skv
-    kp, vp = k, v
-    if pad:
-        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    kc = kp.reshape(b, h, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
-    vc = vp.reshape(b, h, nkv, chunk, d).transpose(2, 0, 1, 3, 4)
+    kc = _chunk_kv(k, chunk)
+    vc = _chunk_kv(v, chunk)
 
     qf = q.astype(jnp.float32)
     dof = do.astype(jnp.float32)
     qi = jnp.arange(sq) + q_offset
-    D = jnp.sum(dof * o.astype(jnp.float32), axis=-1)  # (b,h,sq)
+    D = jnp.sum(dof * o.astype(jnp.float32), axis=-1)  # (b,kvh,g,sq)
 
     def step(dq, inp):
         k_j, v_j, j = inp
         kjf = k_j.astype(jnp.float32)
-        s = jnp.einsum("bhqd,bhcd->bhqc", qf * scale, kjf)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qf * scale, kjf)
         kj = j * chunk + jnp.arange(chunk)
         ok = _mask(qi, kj, causal, window) & (kj < skv)[None, :]
-        s = jnp.where(ok[None, None], s, NEG_INF)
-        p = jnp.exp(s - lse[..., None])  # (b,h,q,c)
-        dv_j = jnp.einsum("bhqc,bhqd->bhcd", p, dof)
-        dp = jnp.einsum("bhqd,bhcd->bhqc", dof, v_j.astype(jnp.float32))
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (b,kvh,g,q,c)
+        # dV/dK contract over g as well: the per-group gradient sum that
+        # jnp.repeat's VJP used to perform.
+        dv_j = jnp.einsum("bkgqc,bkgqd->bkcd", p, dof)
+        dp = jnp.einsum("bkgqd,bkcd->bkgqc", dof, v_j.astype(jnp.float32))
         ds = p * (dp - D[..., None]) * scale
-        dq = dq + jnp.einsum("bhqc,bhcd->bhqd", ds, kjf)
-        dk_j = jnp.einsum("bhqc,bhqd->bhcd", ds, qf)
+        dq = dq + jnp.einsum("bkgqc,bkcd->bkgqd", ds, kjf)
+        dk_j = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qf)
         return dq, (dk_j, dv_j)
 
     dq0 = jnp.zeros_like(qf)
     js = jnp.arange(nkv, dtype=jnp.int32)
     dq, (dks, dvs) = jax.lax.scan(step, dq0, (kc, vc, js), unroll=unroll)
-    dk = dks.transpose(1, 2, 0, 3, 4).reshape(b, h, nkv * chunk, d)[:, :, :skv]
-    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(b, h, nkv * chunk, d)[:, :, :skv]
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(b, kvh, nkv * chunk, d)[:, :, :skv]
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(b, kvh, nkv * chunk, d)[:, :, :skv]
     return (
         dq.astype(q.dtype),
         dk.astype(k.dtype),

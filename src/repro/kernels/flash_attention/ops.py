@@ -33,13 +33,16 @@ def flash_attention_jnp(q, k, v, *, causal=True, window=None, scale=None,
     _, skv, kvh, _ = k.shape
     g = h // kvh
     scale = scale if scale is not None else 1.0 / (d**0.5)
-    qt = q.transpose(0, 2, 1, 3)
-    kt = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
-    vt = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+    # grouped GQA layout: q (B,KVH,G,Sq,D), k/v (B,KVH,Skv,D) — the core
+    # contracts each KV head against its G query heads directly instead
+    # of materializing g× repeated K/V copies.
+    qt = q.reshape(b, sq, kvh, g, d).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
     win = jnp.float32(jnp.inf) if window is None else jnp.asarray(window, jnp.float32)
     chunk = min(chunk, skv)
     o = flash_core(qt, kt, vt, win, causal, float(scale), int(q_offset), chunk, unroll)
-    return o.transpose(0, 2, 1, 3)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d)
 
 
 def flash_attention(
@@ -117,17 +120,21 @@ def decode_attention(
     scale = scale if scale is not None else 1.0 / (d**0.5)
 
     qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
-    qf = qf.reshape(b, 1, kvh, g, d)
+    qf = qf.reshape(b, kvh, g, d)
     # match the cache layout (KVH-sharded when divisible) so the logits
     # einsum partitions by head instead of all-gathering the cache.
-    qf = shard(qf, "decode_q_h")
-    # keep the cache in its storage dtype: casting it to f32 would
-    # materialize a full second copy (the Pallas kernel casts per tile);
-    # f32 accumulation comes from preferred_element_type.
+    qf = shard(qf, "decode_q_kvh")
+    # Transpose the cache to (B, KVH, S, D) — in its storage dtype, so
+    # no f32 second copy is materialized (f32 accumulation comes from
+    # preferred_element_type). With KVH leading, both contractions lower
+    # as plain batched GEMV over S instead of a strided 5-D einsum with
+    # a dummy q axis, which is markedly faster on CPU.
+    kc = k_cache.transpose(0, 2, 1, 3)
+    vc = v_cache.transpose(0, 2, 1, 3)
     logits = jnp.einsum(
-        "bqkgd,bskd->bkgqs", qf, k_cache,
+        "bkgd,bksd->bkgs", qf, kc,
         preferred_element_type=jnp.float32,
-    )  # (b, kvh, g, 1, s)
+    )  # (b, kvh, g, s)
 
     pos = jnp.arange(s)
     lengths = jnp.broadcast_to(jnp.asarray(length), (b,))[:, None]
@@ -136,7 +143,7 @@ def decode_attention(
         # window includes the newest position (index length-1)
         valid = valid & (pos[None, :] >= lengths - window)
     neg = jnp.finfo(jnp.float32).min * 0.7
-    vmask = valid[:, None, None, None, :]
+    vmask = valid[:, None, None, :]
     logits = jnp.where(vmask, logits, neg)
     m = jnp.max(logits, axis=-1, keepdims=True)
     # Zero the masked slots explicitly: when NO slot is valid (length=0,
@@ -146,7 +153,7 @@ def decode_attention(
     denom = jnp.sum(p, axis=-1, keepdims=True)
     p = p / jnp.where(denom > 0.0, denom, 1.0)
     o = jnp.einsum(
-        "bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+        "bkgs,bksd->bkgd", p.astype(v_cache.dtype), vc,
         preferred_element_type=jnp.float32,
     )
     return o.reshape(b, 1, h, d).astype(q.dtype)

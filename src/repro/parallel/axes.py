@@ -89,13 +89,12 @@ class ShardingRules:
             "decode_residual": P(b, None, model if dos else None),
             # ssm state (B, H, N, P)
             "ssm_state": P(b, model, None, None),
-            # decode attention internals: q regrouped (B, 1, KVH, G, D)
-            # and per-head logits (B, KVH, G, 1, S). The D/KVH entries
-            # mirror the cache layout so the contraction stays partial
-            # (psum) instead of forcing a cache all-gather; the shard()
-            # divisibility guard drops whichever axis does not apply.
-            "decode_q_d": P(b, None, None, None, model),
-            "decode_q_h": P(b, None, model, None, None),
+            # decode attention internals: q regrouped (B, KVH, G, D).
+            # The KVH entry mirrors the cache layout so the batched
+            # per-head contraction stays partitioned instead of forcing
+            # a cache all-gather; the shard() divisibility guard drops
+            # the axis when KVH doesn't divide.
+            "decode_q_kvh": P(b, model, None, None),
             "none": P(),
         }
         return table[kind]

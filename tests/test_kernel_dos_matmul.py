@@ -50,3 +50,37 @@ def test_pick_blocks_vmem_budget():
     bm, bn, bk = pick_blocks(4096, 4096, 8192)
     assert bm % 8 == 0 and bn % 128 == 0
     assert 2 * (bm * bk + bk * bn) + 4 * bm * bn <= 8 * 2**20
+
+
+@pytest.mark.parametrize("m,n", [(4096, 128), (128, 4096)])
+def test_pick_blocks_rectangular_for_skewed(m, n):
+    """Tall/wide GEMMs get a rectangular tile: the long output dim's
+    block grows past 128 while staying in the VMEM budget."""
+    bm, bn, bk = pick_blocks(m, n, 4096)
+    long_block = bm if m > n else bn
+    assert long_block > 128
+    assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
+    assert 2 * (bm * bk + bk * bn) + 4 * bm * bn <= 8 * 2**20
+    # square stays square
+    assert pick_blocks(4096, 4096, 4096)[:2] == (128, 128)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 17, 64),    # every dim degenerate
+        (1, 512, 512),  # M=1: below the min sublane tile
+        (64, 17, 256),  # K=17: below the min contraction tile
+        (512, 512, 4),  # N below the min lane tile
+    ],
+)
+def test_degenerate_shapes_dispatch_to_ref(m, k, n):
+    """Dims below the minimum Pallas tile must take the reference path
+    (even under interpret=True) and still match numpy — the padded
+    kernel would be near-all zeros for these."""
+    rng = np.random.default_rng(m + k + n)
+    a = jnp.asarray(rng.normal(size=(m, k)), dtype="float32")
+    b = jnp.asarray(rng.normal(size=(k, n)), dtype="float32")
+    out = np.asarray(dos_matmul(a, b, interpret=True, out_dtype="float32"))
+    want = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4 * max(1.0, np.abs(want).max()))

@@ -59,6 +59,42 @@ def test_chunked_jnp_forward_and_grads(case):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=5e-3, atol=5e-4)
 
 
+@pytest.mark.parametrize("h,kvh", [(4, 4), (16, 1), (8, 2)])
+@pytest.mark.parametrize("dtype,tol", [("float32", 2e-4), ("bfloat16", 3e-2)])
+def test_gqa_grouping_extremes(h, kvh, dtype, tol):
+    """The grouped-layout core (no jnp.repeat) across the GQA spectrum:
+    MHA (h == kvh), MQA (h >> kvh), grouped — per-dtype tolerance
+    bands (bf16 rounds the operands, not the algorithm)."""
+    q, k, v = _mk(2, 128, 128, h, kvh, 64, dtype, seed=7)
+    ref = np.asarray(attention_ref(q, k, v, causal=True), np.float32)
+    out = np.asarray(flash_attention_jnp(q, k, v, causal=True, chunk=64), np.float32)
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+def test_decode_single_slot_cache():
+    """seq_len=1 KV cache: one valid slot is a deterministic copy of v
+    (softmax over one logit), exercising the batched-GEMV path's edge."""
+    q, kc, vc = _mk_decode(b=2, s=1, h=4, kvh=2, d=32)
+    out = np.asarray(decode_attention(q, kc, vc, length=1))
+    want = np.repeat(np.asarray(vc)[:, 0], 2, axis=1).reshape(2, 1, 4, 32)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_bf16_cache_tolerance():
+    """bf16 q/cache vs the f32 reference within the bf16 band — the
+    restructured path must accumulate logits and o in f32."""
+    q, kc, vc = _mk_decode(b=2, s=64, h=4, kvh=2, d=32)
+    out32 = np.asarray(decode_attention(q, kc, vc, length=40))
+    out16 = np.asarray(
+        decode_attention(
+            q.astype(jnp.bfloat16), kc.astype(jnp.bfloat16),
+            vc.astype(jnp.bfloat16), length=40,
+        ),
+        np.float32,
+    )
+    np.testing.assert_allclose(out16, out32, rtol=3e-2, atol=3e-2)
+
+
 def test_traced_window_matches_static():
     """Per-layer scanned metadata passes window as a traced scalar."""
     q, k, v = _mk(1, 128, 128, 2, 2, 32, "float32", seed=5)

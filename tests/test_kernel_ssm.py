@@ -48,6 +48,36 @@ def test_ragged_seq_padding_path():
     np.testing.assert_allclose(np.asarray(s), np.asarray(ref_s), rtol=1e-3, atol=1e-4)
 
 
+def test_auto_chunk_non_dividing_seq():
+    """chunk=None auto-picks (32 on CPU); S=50 does not divide it, so
+    the identity-step padding path must also engage under auto-chunk."""
+    u, ld, B, C = _mk(2, 50, 2, 8, 4, seed=13)
+    ref_y, ref_s = ssm_scan_ref(u, ld, B, C)
+    y, s = ssm_scan(u, ld, B, C)
+    assert y.shape == u.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref_y), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref_s), rtol=1e-3, atol=1e-4)
+
+
+def test_bf16_tolerance_band():
+    """bf16 inputs stay within the bf16 band of the f32 reference run
+    on the SAME rounded operands (isolating algorithm error from input
+    quantization); the chunked math accumulates in f32 and the state
+    is returned in f32."""
+    u, ld, B, C = _mk(1, 64, 2, 16, 8, seed=21)
+    ub, ldb, Bb, Cb = (x.astype(jnp.bfloat16) for x in (u, ld, B, C))
+    ref_y, ref_s = ssm_scan_ref(
+        *(x.astype(jnp.float32) for x in (ub, ldb, Bb, Cb))
+    )
+    y, s = ssm_scan(ub, ldb, Bb, Cb, chunk=32)
+    assert y.dtype == jnp.bfloat16
+    assert s.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(ref_y), rtol=3e-2, atol=3e-2
+    )
+    np.testing.assert_allclose(np.asarray(s), np.asarray(ref_s), rtol=3e-2, atol=3e-2)
+
+
 @given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 8), st.integers(1, 8))
 @settings(max_examples=20, deadline=None)
 def test_decode_step_consistency(bt, h, p, n):
