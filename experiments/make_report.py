@@ -362,6 +362,55 @@ def calibrate_section(cache=None):
     return "\n".join(lines) + "\n"
 
 
+def serve_section(cache=None):
+    """Serving-traffic study: the example ``kind='serve'`` study (a
+    seeded mixed prefill/decode trace on a zoo model, priced per design
+    point through the bandwidth-aware engine) reduced to the sustained
+    serving metrics — the production-facing counterpart of the
+    single-GEMM speedup tables. The full 3D-vs-2D comparison on a
+    larger model is ``benchmarks/serve_bench.py`` / ``BENCH_serve.json``."""
+    from repro.core.study import Study
+
+    out = Study.example("serve").run(cache=cache)
+    p = out.payload
+    pts = p["points"]
+    t = out.study.analysis.serve.traffic
+    lines = [
+        "### Serving traffic (kind='serve')",
+        "",
+        out.describe(),
+        "",
+        f"Trace: {t.n_requests} requests at {t.arrival_rps:g} req/s "
+        f"({p['trace']['tokens_in']} prompt + {p['trace']['tokens_out']} "
+        f"generated tokens), max batch {t.max_batch}, {t.policy} batching, "
+        f"chunked prefill at {t.chunk_prefill} tokens/step; each queue step "
+        "is one vectorized engine call over all design points (seeded — "
+        "re-runs and `--cache`/`--resume` are bit-identical).",
+        "",
+        "| design (RxCxL) | tech | feas | tok/s | TTFT p50/p99 [ms] "
+        "| TPOT p50/p99 [ms] | E/token [mJ] | tok/s/W | stall |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for i in range(p["n_points"]):
+        lines.append(
+            f"| {pts['rows'][i]}x{pts['cols'][i]}x{pts['tiers'][i]} "
+            f"| {pts['tech'][i]} | {'yes' if pts['feasible'][i] else 'no'} "
+            f"| {pts['gen_tok_s'][i]:.0f} "
+            f"| {pts['ttft_p50_s'][i]*1e3:.2f}/{pts['ttft_p99_s'][i]*1e3:.2f} "
+            f"| {pts['tpot_p50_s'][i]*1e3:.2f}/{pts['tpot_p99_s'][i]*1e3:.2f} "
+            f"| {pts['energy_per_token_j'][i]*1e3:.2f} "
+            f"| {pts['tokens_per_s_per_w'][i]:.0f} "
+            f"| {pts['stall_frac'][i]:.0%} |"
+        )
+    s = p["summary"]
+    if s["win_3d_vs_2d"] is not None:
+        lines.append(
+            f"\nBest feasible 3D vs best feasible 2D on tokens/s/W: "
+            f"{s['win_3d_vs_2d']:.2f}x."
+        )
+    return "\n".join(lines) + "\n"
+
+
 def main(sections=None, cache=None):
     """Regenerate the requested sections (None = all). This is what
     ``python -m repro report`` drives. ``cache`` (a directory path)
@@ -371,7 +420,8 @@ def main(sections=None, cache=None):
     sections = (
         set(sections)
         if sections
-        else {"dryrun", "roofline", "dse", "network", "search", "calibrate"}
+        else {"dryrun", "roofline", "dse", "network", "search", "calibrate",
+              "serve"}
     )
     if cache is not None:
         from repro.core.cache import ResultCache
@@ -390,6 +440,8 @@ def main(sections=None, cache=None):
         (HERE / "search_section.md").write_text(search_section(cache=cache))
     if "calibrate" in sections:
         (HERE / "calibrate_section.md").write_text(calibrate_section(cache=cache))
+    if "serve" in sections:
+        (HERE / "serve_section.md").write_text(serve_section(cache=cache))
     if "roofline" not in sections:
         return
     # machine-readable summary for the hillclimb
@@ -419,5 +471,5 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections", nargs="*", default=None,
                     choices=["dryrun", "roofline", "dse", "network", "search",
-                             "calibrate"])
+                             "calibrate", "serve"])
     main(sections=ap.parse_args().sections)

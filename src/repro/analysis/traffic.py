@@ -26,9 +26,58 @@ from __future__ import annotations
 from ..config import ArchConfig, ShapeConfig
 from ..core.ppa import constants as HW
 
-__all__ = ["hbm_seconds_per_device", "traffic_bytes_per_device"]
+__all__ = [
+    "attn_ssm_layer_split",
+    "hbm_seconds_per_device",
+    "kv_bytes_per_context_token",
+    "state_bytes_per_request",
+    "traffic_bytes_per_device",
+]
 
 _B2, _B4 = 2, 4
+
+
+def attn_ssm_layer_split(cfg: ArchConfig) -> tuple[int, int]:
+    """(n_attention_layers, n_ssm_layers) of one forward pass.
+
+    Hybrids (zamba2) run an SSM backbone of ``n_layers`` blocks PLUS a
+    weight-shared attention+MLP block applied every ``attn_every``
+    layers (``core.network._lower_hybrid``); pure-attention families
+    have ``n_attn = n_layers``, pure SSM ``n_ssm = n_layers``. The one
+    split every per-layer accounting in this module (and the serving
+    simulator's kv-cache pricing) agrees on.
+    """
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        return n_attn, cfg.n_layers
+    if cfg.family == "ssm":
+        return 0, cfg.n_layers
+    return cfg.n_layers, 0
+
+
+def kv_bytes_per_context_token(cfg: ArchConfig, bytes_kv: int = _B2) -> float:
+    """kv-cache footprint [bytes] of ONE context token across all
+    attention layers (K + V, ``n_kv_heads x head_dim`` each).
+
+    A decode step reads ``context_len *`` this per request (the full
+    cache shard read of ``traffic_bytes_per_device``) and writes one
+    new slot; the serving simulator (``core.serve``) prices both
+    against the DRAM interface.
+    """
+    n_attn, _ = attn_ssm_layer_split(cfg)
+    return float(n_attn * 2 * cfg.n_kv_heads * cfg.head_dim_ * bytes_kv)
+
+
+def state_bytes_per_request(cfg: ArchConfig) -> float:
+    """SSM recurrent-state traffic [bytes] of one decode step for one
+    request: the f32 state read + written once per SSM layer (the
+    context-length-independent analogue of the kv cache)."""
+    _, n_ssm = attn_ssm_layer_split(cfg)
+    if not n_ssm:
+        return 0.0
+    di = cfg.ssm_expand * cfg.d_model
+    nst = (di // cfg.ssm_head_dim) * cfg.ssm_state * cfg.ssm_head_dim
+    return float(n_ssm * nst * _B4 * 2)
 
 
 def hbm_seconds_per_device(
@@ -83,20 +132,10 @@ def traffic_bytes_per_device(
     # --- per-layer activation traffic (per local token) ---------------------
     # residual r/w (~6E), qkv out, attn o in/out, mlp hidden r+w (~3F incl
     # gate/up write + read), norms (~2E). Heads dims sharded over model.
-    # Mixed-family layer split: hybrids (zamba2) run an SSM backbone of
-    # n_layers blocks PLUS a weight-shared attention+MLP block applied
-    # every attn_every layers (core.network._lower_hybrid) — attention
+    # Mixed-family layer split (see attn_ssm_layer_split) — attention
     # accounting scales with n_attn_layers, SSM accounting with
     # n_ssm_layers, so neither component is double- or zero-counted.
-    # Pure-attention families have n_attn = n_layers; pure SSM n_ssm =
-    # n_layers.
-    if cfg.family == "hybrid":
-        n_attn_layers = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
-        n_ssm_layers = cfg.n_layers
-    elif cfg.family == "ssm":
-        n_attn_layers, n_ssm_layers = 0, cfg.n_layers
-    else:
-        n_attn_layers, n_ssm_layers = cfg.n_layers, 0
+    n_attn_layers, n_ssm_layers = attn_ssm_layer_split(cfg)
     attn_io = (h * hd + 2 * kvh * hd + 2 * h * hd) / model_ax
     attn_blk = 8 * e / model_ax + attn_io + 3 * f / model_ax
     di = cfg.ssm_expand * e
@@ -120,15 +159,14 @@ def traffic_bytes_per_device(
     # --- kv cache / state (decode) ---------------------------------------------
     if mode == "decode":
         if n_attn_layers:
-            cache = (
-                n_attn_layers * shape.global_batch * shape.seq_len
-                * 2 * kvh * hd * _B2 / n_chips
-            )
-            act_traffic += cache  # read the full local cache shard once
-        if n_ssm_layers:
-            nst = (di // cfg.ssm_head_dim) * cfg.ssm_state * cfg.ssm_head_dim
+            # read the full local cache shard once
             act_traffic += (
-                n_ssm_layers * shape.global_batch * nst * _B4 * 2 / n_chips
+                shape.global_batch * shape.seq_len
+                * kv_bytes_per_context_token(cfg) / n_chips
+            )
+        if n_ssm_layers:
+            act_traffic += (
+                shape.global_batch * state_bytes_per_request(cfg) / n_chips
             )
 
     # --- logits ----------------------------------------------------------------

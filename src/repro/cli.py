@@ -12,7 +12,7 @@ Subcommands:
   interrupted large-scale sweeps.
 - ``example-spec <kind>``: print a small runnable template spec for any
   analysis kind (evaluate | schedule | pareto | advise | sweep |
-  roofline | search | calibrate) — ``python -m repro example-spec
+  roofline | search | calibrate | serve) — ``python -m repro example-spec
   evaluate > spec.json`` then ``run`` it. ``run --workers N`` farms a
   ``kind='search'`` study's generation blocks to N worker processes.
 - ``report``: regenerate the ``experiments/`` report sections (the DSE
@@ -42,7 +42,7 @@ from .core.study import ANALYSIS_KINDS, Study
 
 _BENCHES = (
     "dse", "network", "study", "scale", "roofline", "kernels", "search",
-    "calibrate",
+    "calibrate", "serve",
 )
 
 
@@ -201,7 +201,7 @@ def build_parser() -> argparse.ArgumentParser:
     rep = sub.add_parser("report", help="regenerate the experiments/ sections")
     rep.add_argument("--sections", nargs="*", default=None,
                      choices=["dryrun", "roofline", "dse", "network", "search",
-                              "calibrate"],
+                              "calibrate", "serve"],
                      help="subset to regenerate (default: all)")
     rep.add_argument("--cache", nargs="?", const="", default=None, metavar="DIR",
                      help="chunk-cache the live DSE/network studies "

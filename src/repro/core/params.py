@@ -18,9 +18,11 @@ import numpy as np
 __all__ = [
     "VALID_BACKENDS",
     "VALID_DATAFLOWS",
+    "VALID_LENGTH_DISTS",
     "VALID_METRICS",
     "VALID_MODES",
     "VALID_OBJECTIVES",
+    "VALID_SERVE_POLICIES",
     "VALID_TECHS",
     "validate_option",
     "validate_options",
@@ -37,6 +39,12 @@ VALID_METRICS = ("perf", "area", "power", "thermal")
 VALID_BACKENDS = ("numpy", "jax")
 #: shape-search modes: full rectangular search vs square arrays.
 VALID_MODES = ("opt", "square")
+#: serving batch policies (``core.serve.TrafficSpec``): 'continuous'
+#: admits into free slots every step, 'static' drains each batch fully
+#: before admitting the next.
+VALID_SERVE_POLICIES = ("continuous", "static")
+#: request length distributions of the serving traffic sampler.
+VALID_LENGTH_DISTS = ("fixed", "uniform", "lognormal")
 #: minimizable ``EvalResult`` metric columns (Pareto objectives).
 #: ``stall_cycles`` is populated only by bandwidth-aware runs.
 VALID_OBJECTIVES = (

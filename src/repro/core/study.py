@@ -68,6 +68,7 @@ from .params import (
 )
 from .ppa import constants as C
 from .search import SearchSpec, run_search
+from .serve import ServeSpec, TrafficSpec, restore_points, run_serve
 
 __all__ = [
     "ANALYSIS_KINDS",
@@ -80,9 +81,11 @@ __all__ = [
     "CalibratedBandwidth",
     "ConstraintSpec",
     "SearchSpec",
+    "ServeSpec",
     "SpaceSpec",
     "Study",
     "StudyResult",
+    "TrafficSpec",
     "WorkloadSpec",
 ]
 
@@ -92,7 +95,7 @@ SPEC_VERSION = 1
 WORKLOAD_KINDS = ("gemms", "network", "random")
 ANALYSIS_KINDS = (
     "evaluate", "schedule", "pareto", "advise", "sweep", "roofline", "search",
-    "calibrate",
+    "calibrate", "serve",
 )
 SWEEP_FIGURES = ("fig5", "fig6", "fig7")
 
@@ -415,6 +418,16 @@ class AnalysisSpec:
       study accepts via ``bandwidth=``. The workload spec is ignored
       (the "workload" IS the calibration grid); each measured shape is
       one cache chunk, so ``--resume`` replays finished shapes.
+    - ``'serve'``: the serving-traffic simulator (``core.serve``,
+      defaulted ``serve`` ``ServeSpec`` when omitted) — step a seeded
+      batched request queue (admit -> chunked prefill -> interleaved
+      decode -> retire) on every design point of the space, pricing
+      each step through the bandwidth-aware engine, and reduce to
+      tokens/s, p50/p99 TTFT + per-output-token latency, energy/token
+      and tokens/s/W per point. Needs a ``kind='network'`` workload;
+      design-point blocks are the cache chunks (``--resume`` replays
+      finished points bit-for-bit). A ``CalibratedBandwidth`` artifact
+      passed as ``bandwidth=`` prices traffic on fitted constants.
 
     ``bandwidth`` (a ``core.bandwidth.BandwidthSpec`` or its dict
     form) attaches the bandwidth-aware runtime model to ANY kind:
@@ -442,6 +455,7 @@ class AnalysisSpec:
     bandwidth: BandwidthSpec | dict | None = None
     search: SearchSpec | dict | None = None
     calibrate: CalibrateSpec | dict | None = None
+    serve: ServeSpec | dict | None = None
     workers: int | None = None
     params: dict = dataclasses.field(default_factory=dict)
 
@@ -479,6 +493,15 @@ class AnalysisSpec:
             )
         if self.kind == "calibrate" and self.calibrate is None:
             object.__setattr__(self, "calibrate", CalibrateSpec())
+        if self.serve is not None and not isinstance(self.serve, ServeSpec):
+            if not isinstance(self.serve, dict):
+                raise ValueError(
+                    f"serve must be a ServeSpec or dict, "
+                    f"got {type(self.serve).__name__}"
+                )
+            object.__setattr__(self, "serve", ServeSpec.from_dict(self.serve))
+        if self.kind == "serve" and self.serve is None:
+            object.__setattr__(self, "serve", ServeSpec())
         if self.workers is not None:
             n = int(self.workers)
             if n < 1:
@@ -766,6 +789,15 @@ class Study:
             measured.append(d)
         return _calibrate.fit_rows(measured, spec)
 
+    def _run_serve(self, stream, cache: ResultCache | None = None) -> dict:
+        """Serving-traffic simulation (see ``core.serve``): per design
+        point, derive the fixed array and step the seeded request queue,
+        pricing every step through the bandwidth-aware engine. Point
+        blocks are the cache chunks — per-point state is elementwise,
+        so ``--resume`` recomputes exactly the missing points with a
+        bit-identical stitched payload."""
+        return run_serve(self, stream, cache=cache)
+
     def _run_pareto(self, stream, cache: ResultCache | None = None) -> dict:
         payload = self._run_evaluate(stream, cache=cache)
         res, mask = payload["result"], payload["constraint_mask"]
@@ -991,6 +1023,30 @@ class Study:
                     calibrate=CalibrateSpec(preset="smoke", reps=2, warmup=1),
                 ),
             )
+        if kind == "serve":
+            return cls(
+                name="example-serve",
+                workload=WorkloadSpec(kind="network", arch="smollm-135m",
+                                      shape="decode_32k"),
+                space=SpaceSpec(mac_budgets=(2**14, 2**16), tiers=(1, 4, 8)),
+                analysis=AnalysisSpec(
+                    kind="serve",
+                    bandwidth=BandwidthSpec.paper_default(),
+                    serve=ServeSpec(
+                        traffic=TrafficSpec(
+                            arrival_rps=2048.0,
+                            n_requests=8,
+                            prompt_mean=64,
+                            prompt_max=256,
+                            output_mean=8,
+                            output_max=32,
+                            max_batch=4,
+                            chunk_prefill=32,
+                            seed=0,
+                        )
+                    ),
+                ),
+            )
         if kind == "search":
             return cls(
                 name="example-search",
@@ -1050,6 +1106,8 @@ def _restore_payload(kind: str, payload: dict) -> dict:
         out["names"] = np.asarray(out["names"])
     if kind == "calibrate" and isinstance(out.get("artifact"), dict):
         out["artifact"] = CalibratedBandwidth.from_dict(out["artifact"])
+    if kind == "serve" and isinstance(out.get("points"), dict):
+        out["points"] = restore_points(out["points"])
     return out
 
 
@@ -1149,6 +1207,26 @@ class StudyResult:
                 f"holdout err {e['holdout_median_rel_err']:.1%} "
                 f"(uncalibrated {e['uncalibrated_holdout_median_rel_err']:.1%})"
             )
+        if self.kind == "serve":
+            p = self.payload
+            s = p["summary"]
+            best = s["best_3d"] or s["best_2d"]
+            head = (
+                f"{name}: serve {p['trace']['n_requests']} requests x "
+                f"{p['n_points']} design points on {p['arch']} — "
+                f"{s['n_feasible']} feasible"
+            )
+            if best is None:
+                return head + ", no servable design"
+            d = best["design"]
+            head += (
+                f"; best {d[0]}x{d[1]}x{d[2]}/{best['tech']} at "
+                f"{best['gen_tok_s']:.3e} tok/s, "
+                f"{best['tokens_per_s_per_w']:.3e} tok/s/W"
+            )
+            if s["win_3d_vs_2d"] is not None:
+                head += f" ({s['win_3d_vs_2d']:.2f}x 3D-vs-2D on tok/s/W)"
+            return head
         if self.kind == "roofline":
             W, P = self.result.valid.shape
             bc = self.payload["bound_counts"]

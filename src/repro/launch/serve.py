@@ -1,13 +1,17 @@
 """Serving launcher: batched prefill + decode loop.
 
 Drives the same prefill/serve steps the dry-run lowers, on real
-devices. Measures prefill latency and decode throughput; the examples
-use it with reduced configs.
+devices. Measures prefill latency, aggregate decode throughput and
+per-token decode latency percentiles (each step synchronized, so the
+median/p99 spread is visible, not averaged away); the examples use it
+with reduced configs and ``--json`` emits the machine-readable summary
+CI smoke checks parse.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -63,20 +67,30 @@ def serve_loop(
 
         tok = jnp.argmax(logits[:, -1:], axis=-1)
         out_tokens = [tok]
+        # Per-step timing: synchronize every decode step so the
+        # percentiles measure real step latency (the first step carries
+        # the jit compile; it is kept — p99 reports it honestly, the
+        # median ignores it).
+        step_s = []
         t0 = time.time()
         for _ in range(gen_tokens - 1):
+            ts = time.time()
             logits, cache = decode(params, cache, {"token": tok})
             tok = jnp.argmax(logits, axis=-1)
+            tok.block_until_ready()
+            step_s.append(time.time() - ts)
             out_tokens.append(tok)
-        tok.block_until_ready()
         t_decode = time.time() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
+    steps = jnp.asarray(step_s) if step_s else jnp.zeros(1)
     return {
         "generated": gen,
         "prefill_s": t_prefill,
         "decode_s": t_decode,
         "decode_tok_s": batch * (gen_tokens - 1) / max(t_decode, 1e-9),
+        "step_p50_s": float(jnp.percentile(steps, 50)),
+        "step_p99_s": float(jnp.percentile(steps, 99)),
     }
 
 
@@ -88,6 +102,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen-tokens", type=int, default=32)
     ap.add_argument("--strategy", default="dos")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable summary (CI smoke)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -97,8 +113,21 @@ def main():
         cfg, batch=args.batch, prompt_len=args.prompt_len,
         gen_tokens=args.gen_tokens, strategy=args.strategy,
     )
+    if args.json:
+        print(json.dumps({
+            "arch": args.arch,
+            "batch": args.batch,
+            "prompt_len": args.prompt_len,
+            "gen_tokens": args.gen_tokens,
+            "prefill_s": r["prefill_s"],
+            "decode_tok_s": r["decode_tok_s"],
+            "step_p50_s": r["step_p50_s"],
+            "step_p99_s": r["step_p99_s"],
+        }, indent=1))
+        return
     print(
-        f"prefill {r['prefill_s']*1e3:.1f}ms; decode {r['decode_tok_s']:.1f} tok/s; "
+        f"prefill {r['prefill_s']*1e3:.1f}ms; decode {r['decode_tok_s']:.1f} tok/s "
+        f"(step p50 {r['step_p50_s']*1e3:.2f}ms, p99 {r['step_p99_s']*1e3:.2f}ms); "
         f"sample: {r['generated'][0, :16].tolist()}"
     )
 

@@ -1,0 +1,273 @@
+"""The serving-traffic subsystem (``core.serve``): sampler truncation
+bounds, seeded determinism (bit-identical payloads, including across a
+half-populated cache resume), token conservation through the queue, a
+closed-form single-request trace checked against direct engine pricing,
+and fail-fast spec validation.
+
+These tests deliberately avoid hypothesis so they always run under the
+tier-1 ``pytest -x -q`` command.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis.traffic import (
+    kv_bytes_per_context_token,
+    state_bytes_per_request,
+)
+from repro.configs import REGISTRY, SHAPES
+from repro.core.cache import ResultCache
+from repro.core.engine import DesignGrid, evaluate
+from repro.core.network import lower_network
+from repro.core.ppa import constants as C
+from repro.core.serve import ServeSpec, TrafficSpec, sample_trace
+from repro.core.study import (
+    AnalysisSpec,
+    BandwidthSpec,
+    ConstraintSpec,
+    SpaceSpec,
+    Study,
+    StudyResult,
+    WorkloadSpec,
+)
+
+
+def tiny_serve_study(**traffic_kw) -> Study:
+    kw = dict(
+        arrival_rps=4096.0,
+        n_requests=6,
+        prompt_mean=32,
+        prompt_max=128,
+        output_mean=6,
+        output_max=24,
+        max_batch=3,
+        chunk_prefill=16,
+        seed=0,
+    )
+    kw.update(traffic_kw)
+    return Study(
+        name="tiny-serve",
+        workload=WorkloadSpec(kind="network", arch="smollm-135m",
+                              shape="decode_32k"),
+        space=SpaceSpec(mac_budgets=(2**14,), tiers=(1, 2, 4)),
+        analysis=AnalysisSpec(
+            kind="serve",
+            bandwidth=BandwidthSpec.paper_default(),
+            serve=ServeSpec(traffic=TrafficSpec(**kw)),
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "bad, fragment",
+    [
+        (lambda: TrafficSpec(policy="dynamic"), "'continuous'"),
+        (lambda: TrafficSpec(prompt_dist="gaussian"), "'lognormal'"),
+        (lambda: TrafficSpec(output_dist="zipf"), "'fixed'"),
+        (lambda: TrafficSpec(arrival_rps=0.0), "positive"),
+        (lambda: TrafficSpec(arrival_rps=-3.0), "positive"),
+        (lambda: TrafficSpec(sigma=0.0), "positive"),
+        (lambda: TrafficSpec(n_requests=0), ">= 1"),
+        (lambda: TrafficSpec(max_batch=0), ">= 1"),
+        (lambda: TrafficSpec(prompt_mean=512, prompt_max=128), "truncation"),
+        (lambda: TrafficSpec(chunk_prefill=-1), ">= 0"),
+        (lambda: ServeSpec(bytes_kv=0), ">= 1"),
+        (lambda: ServeSpec(design_tokens=0), ">= 1"),
+        (lambda: ServeSpec(traffic=3), "TrafficSpec"),
+        (lambda: AnalysisSpec(kind="serve", serve="nope"), "ServeSpec"),
+    ],
+)
+def test_spec_validation_lists_choices(bad, fragment):
+    with pytest.raises(ValueError, match=".*"):
+        try:
+            bad()
+        except ValueError as e:
+            assert fragment in str(e), (fragment, str(e))
+            raise
+
+
+def test_serve_needs_network_workload():
+    s = Study(
+        workload=WorkloadSpec(kind="gemms", gemms=((64, 64, 64),)),
+        analysis=AnalysisSpec(kind="serve"),
+    )
+    with pytest.raises(ValueError, match="network"):
+        s.run()
+
+
+def test_serve_kind_defaults_spec():
+    a = AnalysisSpec(kind="serve")
+    assert isinstance(a.serve, ServeSpec)
+    assert isinstance(a.serve.traffic, TrafficSpec)
+
+
+def test_spec_json_round_trip():
+    s = tiny_serve_study()
+    s2 = Study.from_json(s.to_json())
+    assert s2 == s
+    # dict traffic coerces like every other nested spec
+    d = s.analysis.serve.to_dict()
+    assert ServeSpec.from_dict(d) == s.analysis.serve
+
+
+# ---------------------------------------------------------------------------
+# Sampler: truncation bounds + determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["fixed", "uniform", "lognormal"])
+def test_sample_trace_truncation_bounds(dist):
+    spec = TrafficSpec(
+        n_requests=512, prompt_dist=dist, prompt_mean=64, prompt_max=96,
+        output_dist=dist, output_mean=16, output_max=20, sigma=1.5, seed=3,
+    )
+    tr = sample_trace(spec)
+    for key, bound in (("prompt_lens", 96), ("output_lens", 20)):
+        v = tr[key]
+        assert v.dtype == np.int64
+        assert v.min() >= 1
+        assert v.max() <= bound
+    if dist == "fixed":
+        assert (tr["prompt_lens"] == 64).all()
+        assert (tr["output_lens"] == 16).all()
+    assert (np.diff(tr["arrival_s"]) > 0).all()
+
+
+def test_sample_trace_seeded():
+    a = sample_trace(TrafficSpec(seed=7))
+    b = sample_trace(TrafficSpec(seed=7))
+    c = sample_trace(TrafficSpec(seed=8))
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+
+
+# ---------------------------------------------------------------------------
+# Simulator invariants
+# ---------------------------------------------------------------------------
+
+def test_conservation_and_determinism():
+    s = tiny_serve_study()
+    r1 = s.run()
+    r2 = s.run()
+    p = r1.payload
+    pts = p["points"]
+    # every admitted token retires, on every design point
+    assert (pts["tokens_prefilled"] == p["trace"]["tokens_in"]).all()
+    assert (pts["tokens_decoded"] == p["trace"]["tokens_out"]).all()
+    # same seed -> bit-identical payload (strict JSON form)
+    assert (
+        json.dumps(r1.to_dict()["payload"], sort_keys=True)
+        == json.dumps(r2.to_dict()["payload"], sort_keys=True)
+    )
+    # artifact JSON round-trip restores the typed arrays exactly
+    r3 = StudyResult.from_json(r1.to_json())
+    for k, v in pts.items():
+        np.testing.assert_array_equal(v, r3.payload["points"][k], err_msg=k)
+    # metrics are sane on this all-feasible grid
+    assert pts["feasible"].all()
+    assert (pts["gen_tok_s"] > 0).all()
+    assert (pts["ttft_p99_s"] >= pts["ttft_p50_s"]).all()
+    assert (pts["tpot_p99_s"] >= pts["tpot_p50_s"]).all()
+
+
+def test_static_policy_and_unchunked_prefill():
+    # static batching drains whole batches; chunk_prefill=0 prefills a
+    # prompt in one step — both must conserve tokens all the same
+    s = tiny_serve_study(policy="static", chunk_prefill=0)
+    p = s.run().payload
+    pts = p["points"]
+    assert (pts["tokens_prefilled"] == p["trace"]["tokens_in"]).all()
+    assert (pts["tokens_decoded"] == p["trace"]["tokens_out"]).all()
+    # static batching can never beat continuous on makespan
+    cont = tiny_serve_study(chunk_prefill=0).run().payload["points"]
+    assert (pts["makespan_s"] >= cont["makespan_s"] - 1e-12).all()
+
+
+def test_resume_bit_identical(tmp_path):
+    s = tiny_serve_study()
+    n = s.analysis.serve.traffic.n_requests
+    cold = s.run(cache=ResultCache(tmp_path, block_cells=n))  # 1 point/chunk
+    ref = json.dumps(cold.to_dict()["payload"], sort_keys=True)
+    files = sorted(tmp_path.glob("*/chunks/points-*.json"))
+    assert len(files) == 3
+    for f in files[::2]:
+        f.unlink()
+    resumed = s.run(cache=ResultCache(tmp_path, block_cells=n))
+    assert resumed.cache["misses"] == 2 and resumed.cache["hits"] == 1
+    assert json.dumps(resumed.to_dict()["payload"], sort_keys=True) == ref
+    warm = s.run(cache=ResultCache(tmp_path, block_cells=n))
+    assert warm.cache["misses"] == 0
+    assert json.dumps(warm.to_dict()["payload"], sort_keys=True) == ref
+
+
+# ---------------------------------------------------------------------------
+# Closed form: one request, fixed lengths, vs direct engine pricing
+# ---------------------------------------------------------------------------
+
+def test_single_request_matches_direct_engine_pricing():
+    arch, shape_name = "smollm-135m", "decode_32k"
+    prompt, output = 32, 2
+    rows, cols, tiers = 16, 16, 2
+    bw = BandwidthSpec.paper_default()
+    s = Study(
+        workload=WorkloadSpec(kind="network", arch=arch, shape=shape_name),
+        space=SpaceSpec(rows=(rows,), cols=(cols,), tiers=(tiers,)),
+        analysis=AnalysisSpec(
+            kind="serve",
+            bandwidth=bw,
+            serve=ServeSpec(traffic=TrafficSpec(
+                n_requests=1,
+                prompt_dist="fixed", prompt_mean=prompt, prompt_max=prompt,
+                output_dist="fixed", output_mean=output, output_max=output,
+                max_batch=1, chunk_prefill=0, seed=0,
+            )),
+        ),
+    )
+    p = s.run().payload
+    pts = p["points"]
+    assert pts["steps"][0] == 2  # one prefill step + one decode step
+
+    # direct engine pricing of the two steps: the per-token GEMM stream
+    # at M=prompt (prefill) and M=1 (decode), plus the serialized
+    # kv-cache service time
+    cfg = REGISTRY[arch]
+    step_shape = dataclasses.replace(
+        SHAPES[shape_name], global_batch=1, mode="decode"
+    )
+    stream = lower_network(cfg, step_shape)
+    K, N = stream.workloads[:, 1], stream.workloads[:, 2]
+    counts = stream.counts.astype(np.float64)
+    bpc = bw.dram_bytes_per_cycle
+    kv_tok = kv_bytes_per_context_token(cfg)
+    ssm = state_bytes_per_request(cfg)
+
+    def step_cycles(m, kv_bytes):
+        wl = np.column_stack([np.full(K.size, m, dtype=np.int64), K, N])
+        grid = DesignGrid.explicit(wl, rows=(rows,), cols=(cols,),
+                                   tiers=(tiers,))
+        res = evaluate(grid, metrics=("perf",), bandwidth=bw)
+        return float(np.sum(counts * res.cycles[:, 0])) + kv_bytes / bpc
+
+    pf_cycles = step_cycles(prompt, prompt * kv_tok)
+    # at the decode step the request has prompt + 1 tokens of context
+    dec_cycles = step_cycles(1, (prompt + 1 + 1) * kv_tok + ssm)
+
+    assert pts["ttft_p50_s"][0] == pytest.approx(
+        pf_cycles / C.FREQ_HZ, rel=1e-12
+    )
+    # TPOT = decode step time per generated-after-first token
+    assert pts["tpot_p50_s"][0] == pytest.approx(
+        dec_cycles / C.FREQ_HZ, rel=1e-12
+    )
+    # makespan = arrival gap + both steps
+    arrival = sample_trace(s.analysis.serve.traffic)["arrival_s"][0]
+    assert pts["makespan_s"][0] == pytest.approx(
+        arrival + (pf_cycles + dec_cycles) / C.FREQ_HZ, rel=1e-12
+    )
