@@ -42,7 +42,7 @@ from .core.study import ANALYSIS_KINDS, Study
 
 _BENCHES = (
     "dse", "network", "study", "scale", "roofline", "kernels", "search",
-    "calibrate", "serve",
+    "calibrate", "serve", "thermal",
 )
 
 
@@ -132,7 +132,19 @@ def _cmd_run(args) -> int:
 
 
 def _cmd_example_spec(args) -> int:
-    print(Study.example(args.kind).to_json())
+    study = Study.example(args.kind)
+    if args.transient:
+        try:
+            study = dataclasses.replace(
+                study,
+                name=study.name + "-transient",
+                analysis=dataclasses.replace(
+                    study.analysis, thermal="transient"
+                ),
+            )
+        except ValueError as e:
+            raise SystemExit(f"error: {e}") from None
+    print(study.to_json())
     return 0
 
 
@@ -196,12 +208,16 @@ def build_parser() -> argparse.ArgumentParser:
     ex = sub.add_parser("example-spec", help="print a runnable template spec")
     ex.add_argument("kind", nargs="?", default="evaluate",
                     choices=list(ANALYSIS_KINDS))
+    ex.add_argument("--transient", action="store_true",
+                    help="switch the template to the transient thermal/DVFS "
+                         "model (thermal='transient' + a default DvfsSpec; "
+                         "evaluate/pareto/roofline/schedule/serve kinds)")
     ex.set_defaults(fn=_cmd_example_spec)
 
     rep = sub.add_parser("report", help="regenerate the experiments/ sections")
     rep.add_argument("--sections", nargs="*", default=None,
                      choices=["dryrun", "roofline", "dse", "network", "search",
-                              "calibrate", "serve"],
+                              "calibrate", "serve", "thermal"],
                      help="subset to regenerate (default: all)")
     rep.add_argument("--cache", nargs="?", const="", default=None, metavar="DIR",
                      help="chunk-cache the live DSE/network studies "

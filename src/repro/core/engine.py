@@ -61,20 +61,30 @@ from .params import (
     VALID_METRICS,
     VALID_MODES,
     VALID_TECHS,
+    VALID_THERMAL_MODES,
     validate_option,
     validate_options,
 )
 from .ppa import constants as C
 from .ppa.area import array_area_um2_batched
 from .ppa.power import array_power_batched
-from .ppa.thermal import lumped_tier_temps
+from .ppa.thermal import ThermalState, lumped_tier_temps, step_temps
+from .pricing import (
+    DvfsSpec,
+    dram_bytes_per_cycle,
+    governed_run,
+    governor_step,
+    scale_power,
+)
 
 __all__ = [
     "BandwidthSpec",
     "DesignGrid",
+    "DvfsSpec",
     "EvalResult",
     "NetworkReport",
     "PolicyResult",
+    "candidate_fixed_designs",
     "evaluate",
     "schedule",
     "thermal_feasible",
@@ -324,6 +334,17 @@ class EvalResult:
     vlink_bytes: np.ndarray | None = None
     sram_need_bytes: np.ndarray | None = None
     within_sram_capacity: np.ndarray | None = None
+    #: sustained-performance group — set iff evaluate() ran with
+    #: thermal='transient': DVFS-governed steps/s over the settled half
+    #: of the run, the cold top-state rate, their ratio, the governed
+    #: hottest-tier excursion [degC], and the (W, P, n_states) fraction
+    #: of governed steps spent in each DVFS state. In this mode
+    #: ``within_thermal_budget`` reflects the governed excursion.
+    sustained_per_s: np.ndarray | None = None
+    peak_per_s: np.ndarray | None = None
+    peak_vs_sustained: np.ndarray | None = None
+    t_max_transient_c: np.ndarray | None = None
+    dvfs_residency: np.ndarray | None = None
 
     @property
     def feasible(self) -> np.ndarray:
@@ -624,6 +645,10 @@ def evaluate(
     shard: int | str | None = None,
     stream: int | None = None,
     bandwidth: BandwidthSpec | dict | None = None,
+    freq_hz: float = C.FREQ_HZ,
+    vdd_v: float = C.VDD,
+    thermal: str = "steady",
+    dvfs: DvfsSpec | dict | None = None,
 ) -> EvalResult:
     """Evaluate every (workload, design point) pair of the grid at once.
 
@@ -656,9 +681,39 @@ def evaluate(
     size. By default grids past ~4M result cells stream automatically.
     Neither knob changes a single result bit (the search is rowwise
     independent; regression-pinned); both compose with ``bandwidth``.
+
+    ``freq_hz`` / ``vdd_v`` move the whole evaluation to another
+    operating point (``core.pricing`` scaling conventions: memory
+    cycles and power follow the clock/supply; compute cycles do not).
+    The defaults are the reference point and are bit-for-bit identical
+    to the historical fixed-1-GHz results.
+
+    ``thermal='transient'`` (requires the 'thermal' metric group)
+    additionally runs the DVFS-governed transient model per design
+    point: the per-workload step is executed ``dvfs.sim_steps`` times
+    against the lumped RC stack (``ppa.thermal.ThermalState``) with the
+    governor (``dvfs``, a ``pricing.DvfsSpec``; defaults to
+    ``DvfsSpec()``) throttling on tier over-temperature. The result
+    gains the sustained-performance group (``sustained_per_s`` ...
+    ``dvfs_residency``) and — the semantic flip —
+    ``within_thermal_budget`` becomes "the *governed* excursion stays
+    under ``thermal_limit``", so a design the steady-state model
+    rejects can be feasible at a lower sustained clock.
     """
     validate_option("backend", backend, VALID_BACKENDS)
+    validate_option("thermal", thermal, VALID_THERMAL_MODES)
     metrics = {validate_option("metric", m, VALID_METRICS) for m in metrics}
+    if thermal == "transient":
+        if "thermal" not in metrics:
+            raise ValueError(
+                "thermal='transient' needs the 'thermal' metric group"
+            )
+        if dvfs is None:
+            dvfs = DvfsSpec()
+        elif not isinstance(dvfs, DvfsSpec):
+            dvfs = DvfsSpec.from_dict(dvfs)
+    elif dvfs is not None:
+        raise ValueError("dvfs requires thermal='transient'")
     if "thermal" in metrics:
         metrics.add("power")
     if "power" in metrics:
@@ -678,13 +733,15 @@ def evaluate(
         parts = [
             _evaluate_block(
                 grid.subset(lo, min(lo + block, P)), backend, metrics, chunk,
-                thermal_limit, n_shards, bandwidth,
+                thermal_limit, n_shards, bandwidth, freq_hz, vdd_v,
+                thermal, dvfs,
             )
             for lo in range(0, P, block)
         ]
         return EvalResult.concat(grid, parts)
     return _evaluate_block(
-        grid, backend, metrics, chunk, thermal_limit, n_shards, bandwidth
+        grid, backend, metrics, chunk, thermal_limit, n_shards, bandwidth,
+        freq_hz, vdd_v, thermal, dvfs,
     )
 
 
@@ -696,6 +753,10 @@ def _evaluate_block(
     thermal_limit: float,
     n_shards: int = 1,
     bandwidth: BandwidthSpec | None = None,
+    freq_hz: float = C.FREQ_HZ,
+    vdd_v: float = C.VDD,
+    thermal: str = "steady",
+    dvfs: DvfsSpec | None = None,
 ) -> EvalResult:
     """One unstreamed evaluation pass (metrics already resolved)."""
     W, P = grid.n_workloads, grid.n_points
@@ -778,9 +839,9 @@ def _evaluate_block(
         # Per-point grid overrides (guided search over memory systems):
         # scalars stay the scalar fast path, bit-identical to before.
         if grid.dram_gbs is not None:
-            bpc = np.tile(grid.dram_gbs, W) * 1e9 / C.FREQ_HZ
+            bpc = np.tile(grid.dram_gbs, W) * 1e9 / freq_hz
         else:
-            bpc = bandwidth.dram_bytes_per_cycle
+            bpc = dram_bytes_per_cycle(bandwidth, freq_hz)
         if grid.sram_kib is not None:
             sram_cap = np.tile(grid.sram_kib, W) * 1024.0
         else:
@@ -809,6 +870,7 @@ def _evaluate_block(
                 sram_bytes=sram_sel,
             )
             mem_cyc2[sel] = tr2["dram_bytes"] / bpc_sel
+        compute_flat = cycles  # pre-roofline array-busy cycles
         cycles, stall_flat, bidx = roofline_cycles(cycles, mem_cyc, vl_cyc)
         stall_flat = np.where(valid, stall_flat, np.nan)
         cycles_2d = np.maximum(cycles_2d, mem_cyc2)
@@ -883,7 +945,9 @@ def _evaluate_block(
             )
             for k, v in p.items():
                 pw.setdefault(k, np.zeros(W * P))[sel] = v
-        t_s = np.where(valid, pw["cycles"] / C.FREQ_HZ, np.nan)
+        pw_ref = pw  # reference-point power (the transient model rescales)
+        pw = scale_power(pw, freq_hz, vdd_v)  # identity at the default point
+        t_s = np.where(valid, pw["cycles"] / freq_hz, np.nan)
         energy = pw["total_w"] * t_s
         t_total = t_s
         power_avg = pw["total_w"]
@@ -893,7 +957,7 @@ def _evaluate_block(
             # compute phase + static power over the stall. Exact when
             # stall == 0: + static * 0.0 adds nothing, preserving the
             # uncapped bit-identity.
-            t_stall = np.where(valid, stall_flat, 0.0) / C.FREQ_HZ
+            t_stall = np.where(valid, stall_flat, 0.0) / freq_hz
             energy = energy + pw["static_w"] * t_stall
             t_total = t_s + t_stall
             with np.errstate(invalid="ignore", divide="ignore"):
@@ -926,6 +990,33 @@ def _evaluate_block(
             t_max_c=t_max.reshape(W, P),
             within_thermal_budget=(t_max < thermal_limit).reshape(W, P),
         )
+
+        if thermal == "transient":
+            # DVFS-governed transient run of each (workload, point)
+            # step: compute/vlink cycle counts are clock-invariant,
+            # memory cycles rescale with the governed clock, power is
+            # rescaled per state from the reference report. Feasibility
+            # flips to the governed excursion.
+            if stall_flat is not None:
+                mem_flat, vl_flat = mem_cyc, vl_cyc
+            else:
+                compute_flat = cycles
+                mem_flat = np.zeros(W * P)
+                vl_flat = np.zeros(W * P)
+            gov = governed_run(
+                compute_flat, mem_flat, vl_flat,
+                pw_ref["static_w"], pw_ref["dynamic_w"], valid,
+                Lf, techf, fp_mm2, rows * cols,
+                dvfs, thermal_limit, freq_hz,
+            )
+            res.update(
+                sustained_per_s=gov["sustained_per_s"].reshape(W, P),
+                peak_per_s=gov["peak_per_s"].reshape(W, P),
+                peak_vs_sustained=gov["peak_vs_sustained"].reshape(W, P),
+                t_max_transient_c=gov["t_max_transient_c"].reshape(W, P),
+                dvfs_residency=gov["residency"].reshape(W, P, dvfs.n_states),
+                within_thermal_budget=gov["within_limit"].reshape(W, P),
+            )
 
     return EvalResult(grid=grid, **res)
 
@@ -1055,6 +1146,10 @@ class NetworkReport:
     n_candidates: int
     n_thermally_masked: int
     thermal_limit: float
+    #: DVFS-governed transient replay of the fixed design (None on
+    #: steady-state runs / pre-transient artifacts): states, residency,
+    #: peak vs sustained pass time, governed excursion, feasibility.
+    dvfs: dict | None = None
 
     def to_dict(self) -> dict:
         out = dataclasses.asdict(self)
@@ -1109,6 +1204,49 @@ def thermal_feasible(
     return res.feasible
 
 
+def candidate_fixed_designs(res: EvalResult, tiers, per_point: bool = False):
+    """Fixed-array candidate designs from a per-layer-optimum pass.
+
+    The shared first half of the two-pass selection ``schedule`` and
+    ``core.serve`` both run: the valid per-layer (rows, cols) optima of
+    ``res`` form the candidate set for the explicit re-evaluation pass
+    (scoring stays with each caller).
+
+    Pooled (default, ``schedule``): the distinct (rows, cols, tiers)
+    triples over every valid (layer, point) cell — (n_cand, 3) int64.
+
+    ``per_point=True`` (``core.serve``): per design point j, the sorted
+    distinct (rows, cols) pairs of its own valid cells, with a (1, 1)
+    fallback for structurally invalid points — returns
+    ``(cand_rows, cand_cols, owner)`` int64 arrays, ``owner[i]`` the
+    original point index candidate i belongs to.
+    """
+    v = res.valid
+    if not per_point:
+        return np.unique(
+            np.stack(
+                [res.rows[v], res.cols[v], np.broadcast_to(tiers, v.shape)[v]],
+                axis=1,
+            ),
+            axis=0,
+        )
+    cand_rows, cand_cols, owner = [], [], []
+    for j in range(v.shape[1]):
+        vj = v[:, j]
+        pairs = sorted(set(zip(res.rows[vj, j].tolist(), res.cols[vj, j].tolist())))
+        if not pairs:
+            pairs = [(1, 1)]  # structurally invalid point (budget < tiers)
+        for r, c in pairs:
+            cand_rows.append(r)
+            cand_cols.append(c)
+            owner.append(j)
+    return (
+        np.asarray(cand_rows, dtype=np.int64),
+        np.asarray(cand_cols, dtype=np.int64),
+        np.asarray(owner, dtype=np.int64),
+    )
+
+
 def _reduce_policy(
     policy, counts, cycles, energy, t_max, util_den, cycles_2d, design, freq_hz,
     stall_cycles: float = 0.0, bound: str = "compute",
@@ -1140,6 +1278,100 @@ def _reduce_policy(
     )
 
 
+def _governed_layer_replay(
+    res2: EvalResult, c_star: int, counts, dvfs: DvfsSpec, thermal_limit: float
+) -> dict:
+    """Replay the fixed design's layer stream under the DVFS governor.
+
+    One pass = the whole network (every layer, count-weighted) on the
+    chosen fixed array; ``dvfs.sim_steps`` passes integrate the lumped
+    RC stack with a governor decision after every layer. Returns the
+    report's ``dvfs`` dict — sustained (last, thermally settled) vs
+    peak (cold, top-state) pass time and the governed verdict.
+    """
+    W = res2.cycles.shape[0]
+    fx = res2.cycles[:, c_star]
+    out = {
+        "freqs_ghz": list(dvfs.freqs_ghz),
+        "vdds_v": list(dvfs.vdds_v),
+        "sim_passes": dvfs.sim_steps,
+    }
+    if not np.all(np.isfinite(fx)):
+        out.update(feasible_transient=False, within_thermal_budget=False)
+        return out
+    stall = (
+        np.nan_to_num(res2.stall_cycles[:, c_star])
+        if res2.stall_cycles is not None
+        else np.zeros(W)
+    )
+    compute = fx - stall
+    mem = (
+        res2.mem_cycles[:, c_star]
+        if res2.mem_cycles is not None
+        else np.zeros(W)
+    )
+    vl = (
+        res2.vlink_cycles[:, c_star]
+        if res2.vlink_cycles is not None
+        else np.zeros(W)
+    )
+    static = res2.static_power_w[:, c_star]
+    dyn = res2.dynamic_power_w[:, c_star]
+    grid2 = res2.grid
+    L = int(grid2.tiers[c_star])
+    tech = (
+        grid2.tech if isinstance(grid2.tech, str) else str(grid2.tech[c_star])
+    )
+    fp_mm2 = float(res2.footprint_um2[0, c_star]) * 1e-6
+    macs = float(grid2.rows[c_star] * grid2.cols[c_star])
+    freqs = dvfs.freqs_hz()
+    sd, ss = dvfs.scales()
+    tstate = ThermalState.init(
+        np.array([fp_mm2]), np.array([L]), np.array([tech]), np.array([macs])
+    )
+    state = dvfs.n_states - 1
+    resid = np.zeros(dvfs.n_states)
+    t_hot = -np.inf
+    pass_s = 0.0
+    counts = np.asarray(counts, dtype=np.float64)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        for _ in range(dvfs.sim_steps):
+            pass_s = 0.0
+            for i in range(W):
+                f = float(freqs[state])
+                tot = max(compute[i], mem[i] * (f / C.FREQ_HZ), vl[i])
+                dt = counts[i] * tot / f
+                pwr = static[i] * ss[state] + dyn[i] * sd[state]
+                tstate = step_temps(
+                    tstate, np.full((1, L), pwr / L), np.array([dt])
+                )
+                tmax = float(tstate.t_max_c[0])
+                t_hot = max(t_hot, tmax)
+                resid[state] += 1.0
+                pass_s += dt
+                state = int(
+                    governor_step(
+                        np.array([state]), np.array([tmax]), thermal_limit, dvfs
+                    )[0]
+                )
+        f_top = float(freqs[-1])
+        peak_s = float(np.sum(
+            counts
+            * np.maximum(compute, np.maximum(mem * (f_top / C.FREQ_HZ), vl))
+            / f_top
+        ))
+    out.update(
+        residency=(resid / resid.sum()).tolist(),
+        peak_pass_s=peak_s,
+        sustained_pass_s=pass_s,
+        peak_vs_sustained=pass_s / peak_s if peak_s > 0 else float("nan"),
+        t_max_transient_c=t_hot,
+        within_thermal_budget=bool(t_hot < thermal_limit),
+        feasible_transient=bool(np.isfinite(pass_s) and t_hot < thermal_limit),
+    )
+    return out
+
+
 def schedule(
     stream,
     mac_budgets=(2**14, 2**16, 2**18),
@@ -1152,6 +1384,8 @@ def schedule(
     chunk: int | None = None,
     shard: int | str | None = None,
     bandwidth: BandwidthSpec | dict | None = None,
+    thermal: str = "steady",
+    dvfs: DvfsSpec | dict | None = None,
 ) -> NetworkReport:
     """Evaluate a whole lowered network stream on the design grid.
 
@@ -1186,10 +1420,27 @@ def schedule(
     can (and does; regression-pinned) flip the winning fixed design
     under a DRAM cap. Uncapped/None is bit-identical to the plain
     schedule.
+
+    ``thermal='transient'`` reports *sustained* instead of gated-peak
+    performance: the steady-state thermal mask is dropped from the
+    candidate selection (structural validity and SRAM capacity still
+    apply), and the winning fixed design's layer stream is replayed
+    ``dvfs.sim_steps`` times under the DVFS governor against the
+    transient RC stack — the report's ``dvfs`` dict carries the
+    governed residency, peak-vs-sustained pass time and the governed
+    excursion's own feasibility verdict.
     """
     validate_option("dataflow", dataflow, VALID_DATAFLOWS)
     validate_option("tech", tech, VALID_TECHS)
     validate_option("backend", backend, VALID_BACKENDS)
+    validate_option("thermal", thermal, VALID_THERMAL_MODES)
+    if thermal == "transient":
+        if dvfs is None:
+            dvfs = DvfsSpec()
+        elif not isinstance(dvfs, DvfsSpec):
+            dvfs = DvfsSpec.from_dict(dvfs)
+    elif dvfs is not None:
+        raise ValueError("dvfs requires thermal='transient'")
     wl = np.atleast_2d(np.asarray(stream.workloads, dtype=np.int64))
     counts = np.asarray(stream.counts, dtype=np.float64)
     W = wl.shape[0]
@@ -1207,14 +1458,7 @@ def schedule(
     # Candidate fixed designs: every distinct per-layer optimum. The
     # per-layer policy minimizes over the same candidate columns, which
     # is what makes fixed >= per_layer a theorem rather than a trend.
-    v = res1.valid
-    cand = np.unique(
-        np.stack(
-            [res1.rows[v], res1.cols[v], np.broadcast_to(grid.tiers, v.shape)[v]],
-            axis=1,
-        ),
-        axis=0,
-    )
+    cand = candidate_fixed_designs(res1, grid.tiers)
     if cand.shape[0] == 0:
         raise ValueError(f"{stream.arch}/{stream.shape}: no valid design point")
 
@@ -1228,7 +1472,14 @@ def schedule(
         grid2, backend=backend, chunk=chunk, thermal_limit=thermal_limit,
         shard=shard, bandwidth=bandwidth,
     )
-    feas = res2.feasible if require_feasible else res2.valid
+    if thermal == "transient" and require_feasible:
+        # sustained mode: thermal gating moves to the governed replay —
+        # structural validity and SRAM capacity still mask candidates
+        feas = res2.valid
+        if res2.within_sram_capacity is not None:
+            feas = feas & res2.within_sram_capacity
+    else:
+        feas = res2.feasible if require_feasible else res2.valid
     # counted from the thermal mask alone — under a bandwidth spec,
     # feasible also carries the SRAM-capacity mask, which must not be
     # misattributed to overheating in the report
@@ -1289,6 +1540,12 @@ def schedule(
         cand[c_star], freq, fx_stall, fx_bound,
     )
 
+    dvfs_report = None
+    if thermal == "transient":
+        dvfs_report = _governed_layer_replay(
+            res2, c_star, counts, dvfs, thermal_limit
+        )
+
     return NetworkReport(
         arch=stream.arch,
         shape=stream.shape,
@@ -1301,6 +1558,7 @@ def schedule(
         n_candidates=int(cand.shape[0]),
         n_thermally_masked=n_thermal_masked,
         thermal_limit=thermal_limit,
+        dvfs=dvfs_report,
     )
 
 

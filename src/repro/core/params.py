@@ -24,6 +24,7 @@ __all__ = [
     "VALID_OBJECTIVES",
     "VALID_SERVE_POLICIES",
     "VALID_TECHS",
+    "VALID_THERMAL_MODES",
     "validate_option",
     "validate_options",
 ]
@@ -39,6 +40,10 @@ VALID_METRICS = ("perf", "area", "power", "thermal")
 VALID_BACKENDS = ("numpy", "jax")
 #: shape-search modes: full rectangular search vs square arrays.
 VALID_MODES = ("opt", "square")
+#: thermal analysis modes: 'steady' gates on the worst-case lumped
+#: steady state at a fixed clock; 'transient' time-steps the same RC
+#: stack under a DVFS governor and gates on the governed excursion.
+VALID_THERMAL_MODES = ("steady", "transient")
 #: serving batch policies (``core.serve.TrafficSpec``): 'continuous'
 #: admits into free slots every step, 'static' drains each batch fully
 #: before admitting the next.

@@ -64,6 +64,9 @@ K_CU_W_MK = 400.0  # copper (TSV fill)
 # normalized per mm^2 of die area.
 R_HEATSINK_KMM2_W = 40.0
 T_AMBIENT_C = 45.0  # in-server ambient at the package
+# Volumetric heat capacity of silicon — gives each tier a thermal mass
+# (footprint x silicon thickness) for the transient RC stepping.
+C_SI_J_M3K = 1.63e6  # J/(m^3 K)
 # Lateral spreading from die edges into the package substrate. Smaller
 # dies have a higher perimeter/area ratio, so they shed relatively more
 # heat sideways — this produces the paper's "hotter with more MACs"

@@ -1,4 +1,4 @@
-"""Steady-state thermal model of 2D / 3D stacked arrays (paper Sec. IV-C).
+"""Thermal model of 2D / 3D stacked arrays (paper Sec. IV-C).
 
 Our HotSpot-6.0 analogue: the die stack is discretized into a
 (tiers x g x g) grid of thermal cells. Steady state solves
@@ -20,6 +20,13 @@ in-die variability.
 Reproduced qualitative findings (Fig. 8): 3D hotter than 2D; hotter
 with more MACs; MIV hotter than TSV (TSVs add area -> lower power
 density -> better heat spreading); all within the thermal budget.
+
+Besides the steady state, the batched lumped model also exposes a
+*transient* form (``ThermalState`` + ``step_temps``): each tier gets a
+thermal mass (footprint x silicon thickness x volumetric heat capacity
+of Si) and the same conductance stack is time-stepped with backward
+Euler, so the steady-state solution is the exact fixed point under
+constant power. This is what the DVFS governor integrates against.
 """
 
 from __future__ import annotations
@@ -31,12 +38,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..params import VALID_TECHS, validate_option, validate_options
 from .power import array_power
 from . import constants as C
 
 __all__ = [
     "ThermalReport",
+    "ThermalState",
     "solve_stack",
+    "step_temps",
     "thermal_report",
     "lumped_tier_temps",
 ]
@@ -56,9 +66,17 @@ class ThermalReport:
     within_budget: bool
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
 def solve_stack(q_w, cell_area_mm2, tiers: int, tech: str):
     """Damped-Jacobi steady-state solve. q_w: (tiers, g, g) power map [W]."""
+    validate_option("tech", tech, VALID_TECHS)
+    tiers = int(tiers)
+    if tiers < 1:
+        raise ValueError(f"tiers must be >= 1, got {tiers}")
+    return _solve_stack_jit(q_w, cell_area_mm2, tiers, tech)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _solve_stack_jit(q_w, cell_area_mm2, tiers: int, tech: str):
     g = q_w.shape[-1]
     cell_side_m = jnp.sqrt(cell_area_mm2) * 1e-3
 
@@ -162,7 +180,26 @@ def lumped_tier_temps(q_tiers_w, footprint_mm2, tiers, tech, macs_per_tier):
     tiers = np.broadcast_to(np.asarray(tiers, np.int64), (B,))
     tech = np.broadcast_to(np.asarray(tech), (B,))
     macs_per_tier = np.broadcast_to(np.asarray(macs_per_tier, np.float64), (B,))
+    diag, sub, sup, rhs, _ = _lumped_system(
+        q, footprint_mm2, tiers, tech, macs_per_tier
+    )
+    return _thomas(diag, sub, sup, rhs)
 
+
+def _lumped_system(q, footprint_mm2, tiers, tech, macs_per_tier):
+    """Assemble the batched lumped tridiagonal system (already broadcast).
+
+    Returns ``(diag, sub, sup, rhs, alive)`` with padded rows pinned to
+    identity x ambient. ``rhs`` includes the per-tier power injection
+    ``q``; pass zeros to get the q-independent part (the transient
+    stepping adds its own source term per step).
+    """
+    validate_options("tech", tech, VALID_TECHS)
+    if np.any(tiers < 1):
+        raise ValueError(
+            f"tiers must be >= 1 everywhere, got min {int(np.min(tiers))}"
+        )
+    Lmax = q.shape[1]
     a_m2 = footprint_mm2 * 1e-6
     g_ild = C.K_ILD_W_MK * a_m2 / (C.T_ILD_UM * 1e-6)
     # Per-MAC TSV copper share: each MAC pile carries VLINK_BITS vias,
@@ -197,24 +234,115 @@ def lumped_tier_temps(q_tiers_w, footprint_mm2, tiers, tech, macs_per_tier):
     # Padded nodes: identity rows pinned to ambient.
     diag = np.where(alive, diag, 1.0)
     rhs = np.where(alive, rhs, C.T_AMBIENT_C)
+    return diag, sub, sup, rhs, alive
 
-    # Vectorized Thomas algorithm over the batch (Lmax <= 16 is tiny).
-    # Degenerate rows (zero-area design points) divide 0/0 and yield
-    # NaN, which callers mask via their validity arrays.
+
+def _thomas(diag, sub, sup, rhs):
+    """Vectorized Thomas algorithm over the batch (Lmax <= 16 is tiny).
+
+    Degenerate rows (zero-area design points) divide 0/0 and yield
+    NaN, which callers mask via their validity arrays.
+    """
+    Lmax = rhs.shape[1]
     with np.errstate(invalid="ignore", divide="ignore"):
-        cp = np.zeros_like(q)
-        dp = np.zeros_like(q)
+        cp = np.zeros_like(rhs)
+        dp = np.zeros_like(rhs)
         cp[:, 0] = sup[:, 0] / diag[:, 0]
         dp[:, 0] = rhs[:, 0] / diag[:, 0]
         for i in range(1, Lmax):
             denom = diag[:, i] - sub[:, i] * cp[:, i - 1]
             cp[:, i] = sup[:, i] / denom
             dp[:, i] = (rhs[:, i] - sub[:, i] * dp[:, i - 1]) / denom
-        T = np.empty_like(q)
+        T = np.empty_like(rhs)
         T[:, -1] = dp[:, -1]
         for i in range(Lmax - 2, -1, -1):
             T[:, i] = dp[:, i] - cp[:, i] * T[:, i + 1]
     return T
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalState:
+    """Batched transient state of the lumped tier stack.
+
+    Holds the assembled (q-independent) conductance system plus each
+    tier's heat capacity and current temperature; advance it with
+    ``step_temps``. Build via ``ThermalState.init``.
+    """
+
+    temps_c: np.ndarray  # (B, Lmax) current tier temperatures [C]
+    alive: np.ndarray  # (B, Lmax) bool, False on padded tiers
+    diag: np.ndarray  # steady-state diagonal (padded rows = 1)
+    sub: np.ndarray
+    sup: np.ndarray
+    rhs0: np.ndarray  # q-independent rhs (padded rows = ambient)
+    cap_j_k: np.ndarray  # (B, Lmax) per-tier heat capacity [J/K], 0 padded
+
+    @classmethod
+    def init(
+        cls,
+        footprint_mm2,
+        tiers,
+        tech,
+        macs_per_tier,
+        t0_c: float = C.T_AMBIENT_C,
+    ) -> "ThermalState":
+        """Assemble a stack batch at a uniform start temperature.
+
+        Args broadcast over the batch dim B exactly as in
+        ``lumped_tier_temps``; the tier heat capacity is the silicon
+        volume (footprint x tier thickness; full-thickness die for
+        single-tier designs) times ``C_SI_J_M3K``.
+        """
+        tiers_b = np.atleast_1d(np.asarray(tiers, np.int64))
+        B = tiers_b.shape[0]
+        Lmax = int(np.max(tiers_b)) if B else 1
+        footprint_mm2 = np.broadcast_to(
+            np.asarray(footprint_mm2, np.float64), (B,)
+        )
+        tech_b = np.broadcast_to(np.asarray(tech), (B,))
+        macs_b = np.broadcast_to(np.asarray(macs_per_tier, np.float64), (B,))
+        q0 = np.zeros((B, Lmax), dtype=np.float64)
+        diag, sub, sup, rhs0, alive = _lumped_system(
+            q0, footprint_mm2, tiers_b, tech_b, macs_b
+        )
+        t_si_m = np.where(tiers_b == 1, C.T_2D_SI_UM, C.T_TIER_SI_UM) * 1e-6
+        cap = footprint_mm2 * 1e-6 * t_si_m * C.C_SI_J_M3K  # J/K per tier
+        cap_j_k = np.where(alive, cap[:, None], 0.0)
+        temps = np.full((B, Lmax), float(t0_c), dtype=np.float64)
+        return cls(
+            temps_c=temps, alive=alive, diag=diag, sub=sub, sup=sup,
+            rhs0=rhs0, cap_j_k=cap_j_k,
+        )
+
+    @property
+    def t_max_c(self) -> np.ndarray:
+        """(B,) hottest live tier per design."""
+        return np.max(np.where(self.alive, self.temps_c, -np.inf), axis=1)
+
+
+def step_temps(state: ThermalState, q_tiers_w, dt_s) -> ThermalState:
+    """One backward-Euler step of the lumped stack: hold per-tier power
+    ``q_tiers_w`` (B, Lmax) [W] for ``dt_s`` (scalar or (B,)) [s].
+
+    Solves ``(C/dt + A) T' = (C/dt) T + rhs(q)`` with the same Thomas
+    sweep as the steady solve, so it is unconditionally stable and the
+    steady-state ``lumped_tier_temps`` solution is its exact fixed
+    point under constant power. ``dt_s`` must be > 0 (use the caller's
+    validity mask to skip degenerate points — NaN temperatures there
+    are masked, exactly as in the steady path).
+    """
+    q = np.asarray(q_tiers_w, dtype=np.float64)
+    dt = np.asarray(dt_s, dtype=np.float64)
+    if dt.ndim == 1:
+        dt = dt[:, None]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        cdt = np.where(state.alive, state.cap_j_k / dt, 0.0)
+        diag = state.diag + cdt
+        rhs = state.rhs0 + np.where(
+            state.alive, q + cdt * state.temps_c, 0.0
+        )
+        T = _thomas(diag, state.sub, state.sup, rhs)
+    return dataclasses.replace(state, temps_c=T)
 
 
 def _power_map(M, K, N, rows, cols, tiers, tech, g=_GRID):
@@ -234,6 +362,9 @@ def _power_map(M, K, N, rows, cols, tiers, tech, g=_GRID):
 
 def thermal_report(macs_per_tier: int, tiers: int, tech: str, M=128, K=300, N=128):
     """Fig. 8 setup: per-layer temperature stats for a given config."""
+    validate_option("tech", tech, VALID_TECHS)
+    if int(tiers) < 1:
+        raise ValueError(f"tiers must be >= 1, got {tiers}")
     side = int(np.sqrt(macs_per_tier))
     rows = cols = side
     q, rep = _power_map(M, K, N, rows, cols, tiers, tech)

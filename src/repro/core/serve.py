@@ -24,8 +24,7 @@ This module answers it with the pieces the repo already has:
   count-weighted-best feasible candidate wins — then (2) steps the
   batched request queue (admit -> chunked prefill -> interleaved
   decode -> retire), pricing every step with one vectorized call into
-  the bandwidth-aware engine primitives (``analytical.dataflow_dims``
-  + ``bandwidth.gemm_traffic_batched`` + ``bandwidth.roofline_cycles``
+  the shared frequency-aware step pricer (``core.pricing.price_steps``
   over all layers x design points at once), and (3) reduces to
   tokens/s, p50/p99 TTFT, p50/p99 per-output-token latency,
   energy/token and tokens/s/W per design point.
@@ -70,13 +69,20 @@ import math
 
 import numpy as np
 
-from .analytical import dataflow_dims
-from .bandwidth import BandwidthSpec, gemm_traffic_batched, roofline_cycles
+from .bandwidth import BandwidthSpec
 from .cache import ResultCache
-from .engine import DesignGrid, evaluate
+from .engine import DesignGrid, candidate_fixed_designs, evaluate
 from .params import VALID_LENGTH_DISTS, VALID_SERVE_POLICIES, validate_option
 from .ppa import constants as C
 from .ppa.power import array_power_batched
+from .ppa.thermal import ThermalState, step_temps
+from .pricing import (
+    DvfsSpec,
+    dram_bytes_per_cycle,
+    governor_step,
+    power_scales,
+    price_steps,
+)
 
 __all__ = [
     "ServeSpec",
@@ -89,13 +95,15 @@ __all__ = [
 #: fields of the per-point payload arrays and their restored dtypes.
 _POINT_INT = ("rows", "cols", "tiers", "steps", "tokens_prefilled",
               "tokens_decoded")
-_POINT_BOOL = ("valid", "feasible")
+_POINT_BOOL = ("valid", "feasible", "feasible_steady")
 _POINT_STR = ("dataflow", "tech")
 _POINT_FLOAT = (
     "t_max_c", "area_um2", "gen_tok_s", "total_tok_s", "ttft_p50_s",
     "ttft_p99_s", "tpot_p50_s", "tpot_p99_s", "energy_j",
     "energy_per_token_j", "avg_power_w", "tokens_per_s_per_w",
     "makespan_s", "stall_frac", "dram_bytes",
+    # transient-mode (thermal='transient') extras; absent on steady runs
+    "peak_tok_s", "peak_vs_sustained", "t_max_transient_c",
 )
 POINT_FIELDS = _POINT_INT + _POINT_BOOL + _POINT_STR + _POINT_FLOAT
 
@@ -278,15 +286,24 @@ def _per_point(value, n: int) -> np.ndarray:
     return np.full(n, value) if isinstance(value, str) else np.asarray(value)
 
 
-def _derive_designs(study, sub: DesignGrid, counts: np.ndarray, bandwidth) -> dict:
+def _derive_designs(
+    study, sub: DesignGrid, counts: np.ndarray, bandwidth,
+    thermal: str = "steady",
+) -> dict:
     """One fixed (R, C, L) array per design point of ``sub``.
 
     Mirrors ``engine.schedule``'s two passes, per point: the per-layer
-    (R, C) optima at the representative step are the candidate set;
+    (R, C) optima at the representative step are the candidate set
+    (``engine.candidate_fixed_designs``, the shared enumeration);
     candidates are re-evaluated explicitly over all layers and the
     count-weighted-cheapest wins — restricted to candidates feasible
     on every layer when ``constraints.require_feasible`` (falling back
     to the unrestricted optimum, flagged infeasible, when none is).
+
+    ``thermal='transient'`` drops the worst-case steady thermal gate
+    from the *selection* mask — the governed simulation decides thermal
+    feasibility — while ``feasible_steady`` keeps the steady verdict
+    for the peak-vs-sustained comparison.
     """
     kw = _eval_kw(study, bandwidth)
     res = evaluate(sub, **kw)
@@ -294,17 +311,9 @@ def _derive_designs(study, sub: DesignGrid, counts: np.ndarray, bandwidth) -> di
     df_p = _per_point(sub.dataflow, Pb)
     tech_p = _per_point(sub.tech, Pb)
 
-    cand_rows, cand_cols, owner = [], [], []
-    for j in range(Pb):
-        v = res.valid[:, j]
-        pairs = sorted(set(zip(res.rows[v, j].tolist(), res.cols[v, j].tolist())))
-        if not pairs:
-            pairs = [(1, 1)]  # structurally invalid point (budget < tiers)
-        for r, c in pairs:
-            cand_rows.append(r)
-            cand_cols.append(c)
-            owner.append(j)
-    owner = np.asarray(owner, dtype=np.int64)
+    cand_rows, cand_cols, owner = candidate_fixed_designs(
+        res, sub.tiers, per_point=True
+    )
     cand = DesignGrid.explicit(
         sub.workloads,
         rows=cand_rows,
@@ -317,7 +326,15 @@ def _derive_designs(study, sub: DesignGrid, counts: np.ndarray, bandwidth) -> di
     w = counts[:, None].astype(np.float64)
     tot = np.sum(w * res_c.cycles, axis=0)
     valid_c = res_c.valid.all(axis=0)
-    feas_c = study.constraints.mask(res_c).all(axis=0)
+    feas_steady = study.constraints.mask(res_c).all(axis=0)
+    if thermal == "transient" and res_c.within_thermal_budget is not None:
+        relaxed = dataclasses.replace(
+            res_c,
+            within_thermal_budget=np.ones_like(res_c.within_thermal_budget),
+        )
+        feas_c = study.constraints.mask(relaxed).all(axis=0)
+    else:
+        feas_c = feas_steady
 
     pick = np.zeros(Pb, dtype=np.int64)
     for j in range(Pb):
@@ -333,15 +350,19 @@ def _derive_designs(study, sub: DesignGrid, counts: np.ndarray, bandwidth) -> di
         else np.full(len(owner), np.nan)
     )
     return {
-        "rows": np.asarray(cand_rows, dtype=np.int64)[pick],
-        "cols": np.asarray(cand_cols, dtype=np.int64)[pick],
+        "rows": cand_rows[pick],
+        "cols": cand_cols[pick],
         "tiers": np.asarray(sub.tiers, dtype=np.int64),
         "dataflow": df_p,
         "tech": tech_p,
         "valid": valid_c[pick],
         "feasible": feas_c[pick],
+        "feasible_steady": feas_steady[pick],
         "t_max_c": np.asarray(t_max, dtype=np.float64)[pick],
         "area_um2": np.asarray(res_c.area_um2[0], dtype=np.float64)[pick],
+        "footprint_um2": np.asarray(
+            res_c.footprint_um2[0], dtype=np.float64
+        )[pick],
     }
 
 
@@ -370,7 +391,6 @@ class _StepPricer:
         self.N = np.asarray(N, dtype=np.int64)
         self.counts = np.asarray(counts, dtype=np.float64)
         self.bw = bandwidth
-        self.bpc = bandwidth.dram_bytes_per_cycle  # inf when unbounded
         df = designs["dataflow"]
         self.groups = {
             str(d): np.nonzero(df == d)[0] for d in np.unique(df).tolist()
@@ -383,7 +403,12 @@ class _StepPricer:
             )
             self.static_w[idx] = pw["static_w"]
 
-    def price(self, m_tokens: np.ndarray, kv_bytes: np.ndarray):
+    def price(self, m_tokens: np.ndarray, kv_bytes: np.ndarray,
+              freq_hz=C.FREQ_HZ, vdd_v=C.VDD):
+        """Step cycles (at ``freq_hz``), stall cycles, energy [J] and
+        DRAM bytes per design point. ``freq_hz``/``vdd_v`` accept
+        per-point arrays (the DVFS governor's operating points); the
+        scalar default reproduces the 1 GHz pricing bit-for-bit."""
         P = self.rows.size
         step = np.zeros(P)
         stall = np.zeros(P)
@@ -391,38 +416,41 @@ class _StepPricer:
         dram = np.zeros(P)
         act = m_tokens > 0
         cw = self.counts[:, None]
+        f_scalar = np.isscalar(freq_hz)
+        v_scalar = np.isscalar(vdd_v)
         for d, idx in self.groups.items():
             if not act[idx].any():
                 continue
             R, Cc, L = self.rows[idx], self.cols[idx], self.tiers[idx]
             m = np.maximum(m_tokens[idx], 1)  # priced, then masked by act
             Kc, Nc = self.K[:, None], self.N[:, None]
-            D1, D2, T = dataflow_dims(d, m[None, :], Kc, Nc, L[None, :])
-            folds = -(-D1 // R[None, :]) * -(-D2 // Cc[None, :])
-            compute = (2 * R + Cc + T - 2).astype(np.float64) * folds
-            tr = gemm_traffic_batched(
+            f = freq_hz if f_scalar else freq_hz[idx]
+            v = vdd_v if v_scalar else vdd_v[idx]
+            pr = price_steps(
                 d, m[None, :], Kc, Nc, R[None, :], Cc[None, :], L[None, :],
-                np.broadcast_to(self.tech[idx][None, :], compute.shape), self.bw,
+                np.broadcast_to(
+                    self.tech[idx][None, :], (self.K.size, idx.size)
+                ),
+                self.bw, f, v,
             )
-            with np.errstate(invalid="ignore"):
-                mem = tr["dram_bytes"] / self.bpc
-            total, st, _ = roofline_cycles(compute, mem, tr["vlink_cycles"])
-            w_total = np.sum(cw * total, axis=0)
+            compute = pr["compute_cycles"]
+            w_total = np.sum(cw * pr["total_cycles"], axis=0)
             w_compute = np.sum(cw * compute, axis=0)
-            kv_cyc = kv_bytes[idx] / self.bpc
-            pw = array_power_batched(
-                m[None, :], Kc, Nc, R[None, :], Cc[None, :], L[None, :],
-                np.broadcast_to(self.tech[idx][None, :], compute.shape), d,
-            )
+            kv_cyc = kv_bytes[idx] / dram_bytes_per_cycle(self.bw, f)
+            _, ss = power_scales(f, v)
             step_g = w_total + kv_cyc
-            e_active = np.sum(cw * pw["total_w"] * compute, axis=0) / C.FREQ_HZ
-            e_stall = self.static_w[idx] * (step_g - w_compute) / C.FREQ_HZ
+            e_active = np.sum(cw * pr["total_w"] * compute, axis=0) / f
+            e_stall = self.static_w[idx] * ss * (step_g - w_compute) / f
             a = act[idx]
             step[idx] = np.where(a, step_g, 0.0)
-            stall[idx] = np.where(a, np.sum(cw * st, axis=0) + kv_cyc, 0.0)
+            stall[idx] = np.where(
+                a, np.sum(cw * pr["stall_cycles"], axis=0) + kv_cyc, 0.0
+            )
             energy[idx] = np.where(a, e_active + e_stall, 0.0)
             dram[idx] = np.where(
-                a, np.sum(cw * tr["dram_bytes"], axis=0) + kv_bytes[idx], 0.0
+                a,
+                np.sum(cw * pr["dram_bytes"], axis=0) + kv_bytes[idx],
+                0.0,
             )
         # structurally invalid designs serve nothing in finite time
         bad = act & ~self.valid
@@ -437,13 +465,25 @@ class _StepPricer:
 # ---------------------------------------------------------------------------
 
 def _simulate(designs: dict, K, N, counts, trace: dict, spec: ServeSpec,
-              bandwidth: BandwidthSpec, cfg) -> dict:
+              bandwidth: BandwidthSpec, cfg, thermal: str = "steady",
+              dvfs: DvfsSpec | None = None,
+              thermal_limit: float = C.THERMAL_BUDGET_C) -> dict:
     """Step the batched request queue on every design point at once.
 
     All per-point state is elementwise (a design point never reads
     another's state), so simulating a subset of points and slicing a
     full run give identical bits — the property the chunk cache and
     ``--resume`` rely on.
+
+    ``thermal='transient'`` threads the DVFS governor through the
+    stepping: every step is priced at the per-point governed (f, V)
+    operating point, converted back to reference 1 GHz cycles for the
+    queue clock, and the lumped RC stack integrates the step's average
+    power over its wall-clock duration; the governor reacts to the
+    hottest tier after every step. The output then *is* sustained
+    serving performance, with ``t_max_transient_c`` (governed
+    excursion) and ``dvfs_residency`` (per-state step fractions,
+    (P, n_states)) added.
     """
     # deferred: analysis.traffic imports core.ppa, whose package
     # __init__ loads this module — importing at module scope would
@@ -477,6 +517,26 @@ def _simulate(designs: dict, K, N, counts, trace: dict, spec: ServeSpec,
     energy = np.zeros(P)
     dram = np.zeros(P)
 
+    governed = thermal == "transient"
+    if governed:
+        if dvfs is None:
+            dvfs = DvfsSpec()
+        freqs = dvfs.freqs_hz()
+        vdds = np.asarray(dvfs.vdds_v, dtype=np.float64)
+        _, ss_states = dvfs.scales()
+        gstate = np.full(P, dvfs.n_states - 1, dtype=np.int64)
+        tstate = ThermalState.init(
+            designs["footprint_um2"] * 1e-6,
+            designs["tiers"],
+            designs["tech"],
+            (designs["rows"] * designs["cols"]).astype(np.float64),
+        )
+        tiers_f = designs["tiers"].astype(np.float64)
+        resid = np.zeros((P, dvfs.n_states))
+        n_ran = np.zeros(P)
+        t_hot = np.full(P, -np.inf)
+        rows_p = np.arange(P)
+
     cap = spec.max_steps or int(
         n * (-(-int(prompt.max()) // chunk) + int(output.max()) + 2) + 16
     )
@@ -495,7 +555,12 @@ def _simulate(designs: dict, K, N, counts, trace: dict, spec: ServeSpec,
         next_arr = np.min(np.where(waiting, arrival[None, :], np.inf), axis=1)
         gap = np.where(~has_act & (next_arr > t), next_arr - t, 0.0)
         with np.errstate(invalid="ignore"):
-            energy += np.where(gap > 0, pricer.static_w * gap / C.FREQ_HZ, 0.0)
+            static_now = (
+                pricer.static_w * ss_states[gstate] if governed
+                else pricer.static_w
+            )
+            e_gap = np.where(gap > 0, static_now * gap / C.FREQ_HZ, 0.0)
+            energy += e_gap
         t = t + gap
         # Admission, in arrival order, into the policy's free slots.
         slots = tr.max_batch - active.sum(axis=1)
@@ -513,9 +578,39 @@ def _simulate(designs: dict, K, N, counts, trace: dict, spec: ServeSpec,
         m = n_pf + n_dec
         ctx = np.where(dec, prompt[None, :] + (output[None, :] - rem_out), 0)
         kv_bytes = (ctx.sum(axis=1) + n_dec + n_pf) * kv_tok + n_dec * ssm_req
-        step, stl, e, db = pricer.price(m, kv_bytes)
+        if governed:
+            f_cur = freqs[gstate]
+            step, stl, e, db = pricer.price(m, kv_bytes, f_cur, vdds[gstate])
+            # queue time is kept in reference 1 GHz cycles: a step at a
+            # throttled clock costs proportionally more of them.
+            scale = C.FREQ_HZ / f_cur
+            step = step * scale
+            stl = stl * scale
+        else:
+            step, stl, e, db = pricer.price(m, kv_bytes)
         t_new = t + step
         ran = m > 0
+        if governed:
+            with np.errstate(invalid="ignore", divide="ignore"):
+                dt_s = (gap + np.where(ran, step, 0.0)) / C.FREQ_HZ
+                e_iter = e_gap + np.where(ran, e, 0.0)
+                upd = (dt_s > 0) & np.isfinite(dt_s)
+                dt_safe = np.where(upd, dt_s, 1.0)
+                p_avg = np.where(
+                    upd & np.isfinite(e_iter), e_iter / dt_safe, 0.0
+                )
+                q = np.where(
+                    tstate.alive, (p_avg / tiers_f)[:, None], 0.0
+                )
+                t_next = step_temps(tstate, q, dt_safe).temps_c
+                tstate = dataclasses.replace(
+                    tstate,
+                    temps_c=np.where(upd[:, None], t_next, tstate.temps_c),
+                )
+            t_hot = np.fmax(t_hot, tstate.t_max_c)
+            resid[rows_p[ran], gstate[ran]] += 1.0
+            n_ran += ran
+            gstate = governor_step(gstate, tstate.t_max_c, thermal_limit, dvfs)
         steps += ran
         total_cyc += np.where(ran, step, 0.0)
         stall_cyc += np.where(ran, stl, 0.0)
@@ -570,6 +665,11 @@ def _simulate(designs: dict, K, N, counts, trace: dict, spec: ServeSpec,
             "tokens_prefilled": tok_pf,
             "tokens_decoded": tok_dec,
         }
+        if governed:
+            out["t_max_transient_c"] = np.where(
+                designs["valid"], t_hot, np.nan
+            )
+            out["dvfs_residency"] = resid / np.maximum(n_ran, 1.0)[:, None]
     return out
 
 
@@ -666,6 +766,10 @@ def run_serve(study, stream, cache: ResultCache | None = None) -> dict:
     counts = per_tok.counts
 
     bandwidth = study.analysis.bandwidth or BandwidthSpec()
+    thermal = study.analysis.thermal
+    dvfs = study.analysis.dvfs
+    if thermal == "transient" and dvfs is None:
+        dvfs = DvfsSpec()
     m_rep = spec.design_tokens or (tr.max_batch + tr.chunk_prefill)
     wl_rep = np.column_stack(
         [np.full(K.size, m_rep, dtype=np.int64), K, N]
@@ -682,21 +786,48 @@ def run_serve(study, stream, cache: ResultCache | None = None) -> dict:
         d = cache.load_chunk(study, key) if cache is not None else None
         if d is None:
             sub = grid.subset(lo, hi)
-            designs = _derive_designs(study, sub, counts, bandwidth)
+            designs = _derive_designs(study, sub, counts, bandwidth, thermal)
             metrics = _simulate(designs, K, N, counts, trace, spec, bandwidth, cfg)
             d = {k: designs[k] for k in
                  ("rows", "cols", "tiers", "dataflow", "tech", "valid",
                   "feasible", "t_max_c", "area_um2")}
-            d.update(metrics)
+            if thermal == "transient":
+                gov = _simulate(
+                    designs, K, N, counts, trace, spec, bandwidth, cfg,
+                    thermal="transient", dvfs=dvfs,
+                    thermal_limit=study.constraints.thermal_limit_c,
+                )
+                d["feasible_steady"] = designs["feasible_steady"]
+                d["peak_tok_s"] = metrics["gen_tok_s"]
+                d.update(gov)
+                with np.errstate(invalid="ignore", divide="ignore"):
+                    d["peak_vs_sustained"] = (
+                        d["peak_tok_s"] / gov["gen_tok_s"]
+                    )
+                # governed verdict replaces the worst-case steady gate
+                d["feasible"] = (
+                    designs["feasible"]
+                    & np.isfinite(d["t_max_transient_c"])
+                    & (d["t_max_transient_c"]
+                       < study.constraints.thermal_limit_c)
+                )
+            else:
+                d.update(metrics)
             if cache is not None:
                 cache.store_chunk(study, key, _jsonify(d))
         parts.append(restore_points(d))
     points = {
         k: np.concatenate([p[k] for p in parts]) for k in parts[0]
     }
+    extra = (
+        {"thermal": "transient", "dvfs": dvfs.to_dict()}
+        if thermal == "transient"
+        else {}
+    )
     return {
         "arch": study.workload.arch,
         "shape": study.workload.shape,
+        **extra,
         "n_points": P,
         "n_gemm_layers": int(K.size),
         "design_tokens": int(m_rep),

@@ -63,10 +63,12 @@ from .params import (
     VALID_MODES,
     VALID_OBJECTIVES,
     VALID_TECHS,
+    VALID_THERMAL_MODES,
     validate_option,
     validate_options,
 )
 from .ppa import constants as C
+from .pricing import DvfsSpec
 from .search import SearchSpec, run_search
 from .serve import ServeSpec, TrafficSpec, restore_points, run_serve
 
@@ -80,6 +82,7 @@ __all__ = [
     "CalibrateSpec",
     "CalibratedBandwidth",
     "ConstraintSpec",
+    "DvfsSpec",
     "SearchSpec",
     "ServeSpec",
     "SpaceSpec",
@@ -437,6 +440,18 @@ class AnalysisSpec:
     advisor's HBM term. ``None`` (default) keeps the compute-bound
     model bit-for-bit.
 
+    ``thermal`` selects the thermal model: ``'steady'`` (default) gates
+    on the worst-case lumped steady state at the fixed 1 GHz clock —
+    bit-identical to studies written before the knob existed — while
+    ``'transient'`` time-steps the same RC stack under a discrete DVFS
+    governor (``dvfs``, a ``core.pricing.DvfsSpec`` or its dict form,
+    defaulted when omitted) and reports *sustained* performance:
+    evaluate/pareto/roofline points gain ``sustained_per_s`` /
+    ``peak_vs_sustained`` / ``t_max_transient_c`` / ``dvfs_residency``,
+    schedule reports the governed replay of its fixed design, and
+    serve's queue stepping is governed end-to-end (tokens/s *is*
+    sustained). ``dvfs`` without ``thermal='transient'`` is an error.
+
     ``chunk=None`` uses the engine default, except for network
     workloads where the adaptive bound kicks in (token-sized M dims).
     ``shard`` is the engine's device-sharding knob (``'auto'`` = split
@@ -456,6 +471,8 @@ class AnalysisSpec:
     search: SearchSpec | dict | None = None
     calibrate: CalibrateSpec | dict | None = None
     serve: ServeSpec | dict | None = None
+    thermal: str = "steady"
+    dvfs: DvfsSpec | dict | None = None
     workers: int | None = None
     params: dict = dataclasses.field(default_factory=dict)
 
@@ -502,6 +519,38 @@ class AnalysisSpec:
             object.__setattr__(self, "serve", ServeSpec.from_dict(self.serve))
         if self.kind == "serve" and self.serve is None:
             object.__setattr__(self, "serve", ServeSpec())
+        validate_option("thermal", self.thermal, VALID_THERMAL_MODES)
+        if self.dvfs is not None and not isinstance(self.dvfs, DvfsSpec):
+            if not isinstance(self.dvfs, dict):
+                raise ValueError(
+                    f"dvfs must be a DvfsSpec or dict, "
+                    f"got {type(self.dvfs).__name__}"
+                )
+            object.__setattr__(self, "dvfs", DvfsSpec.from_dict(self.dvfs))
+        if self.thermal == "transient":
+            if self.kind not in (
+                "evaluate", "pareto", "roofline", "schedule", "serve"
+            ):
+                raise ValueError(
+                    f"thermal='transient' applies to evaluate/pareto/"
+                    f"roofline/schedule/serve studies, not kind="
+                    f"{self.kind!r}"
+                )
+            if (
+                self.kind in ("evaluate", "pareto", "roofline")
+                and "thermal" not in self.metrics
+            ):
+                raise ValueError(
+                    "thermal='transient' needs the 'thermal' metric group "
+                    "in metrics= (the governor integrates the RC stack)"
+                )
+            if self.dvfs is None:
+                object.__setattr__(self, "dvfs", DvfsSpec())
+        elif self.dvfs is not None:
+            raise ValueError(
+                "dvfs= needs thermal='transient' (the governor only runs "
+                "in the transient model)"
+            )
         if self.workers is not None:
             n = int(self.workers)
             if n < 1:
@@ -710,6 +759,9 @@ class Study:
         kw["thermal_limit"] = self.constraints.thermal_limit_c
         kw["shard"] = self.analysis.shard
         kw["bandwidth"] = self.analysis.bandwidth
+        if self.analysis.thermal == "transient" and "thermal" in kw["metrics"]:
+            kw["thermal"] = "transient"
+            kw["dvfs"] = self.analysis.dvfs
         if cache is None:
             return evaluate(grid, **kw)
         # Chunked, cached execution: consecutive point-blocks, each
@@ -843,6 +895,8 @@ class Study:
             require_feasible=self.constraints.require_feasible,
             shard=self.analysis.shard,
             bandwidth=self.analysis.bandwidth,
+            thermal=self.analysis.thermal,
+            dvfs=self.analysis.dvfs,
             **kw,
         )
         payload = {"report": rep}

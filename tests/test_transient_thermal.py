@@ -1,0 +1,356 @@
+"""Transient thermal/DVFS layer (``core.pricing`` + ``ppa.thermal``
+time stepping): the steady lumped solve is the exact fixed point of
+``step_temps``; the governor throttles down/steps up with hysteresis
+and stays in range; governed sustained throughput never exceeds peak
+and tightens monotonically with the thermal limit; the steady code
+paths stay bit-identical when transient mode is off; and the pinned
+steady-infeasible-3D-beats-2D feasibility flip from the thermal bench
+holds through the full serve stack.
+"""
+
+import dataclasses
+import json
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(__import__("pathlib").Path(__file__).parent))
+from _hyp import given, settings, st
+
+from repro.configs import REGISTRY, SHAPES
+from repro.core.engine import DesignGrid, NetworkReport, evaluate, schedule
+from repro.core.network import lower_network
+from repro.core.ppa import constants as C
+from repro.core.ppa.thermal import ThermalState, lumped_tier_temps, step_temps
+from repro.core.pricing import DvfsSpec, governed_run, governor_step
+from repro.core.study import (
+    AnalysisSpec,
+    BandwidthSpec,
+    ConstraintSpec,
+    ServeSpec,
+    SpaceSpec,
+    Study,
+    TrafficSpec,
+    WorkloadSpec,
+)
+
+WORKLOADS = [(64, 3072, 768), (256, 768, 768)]
+
+BATCH = dict(
+    footprint_mm2=np.array([4.2, 4.2, 30.0]),
+    tiers=np.array([4, 8, 1]),
+    tech=np.array(["tsv", "miv", "2d"]),
+    macs_per_tier=np.array([4096.0, 4096.0, 65536.0]),
+)
+
+
+def _q(q_tier):
+    L = int(BATCH["tiers"].max())
+    return np.where(
+        np.arange(L)[None, :] < BATCH["tiers"][:, None],
+        np.asarray(q_tier)[:, None],
+        0.0,
+    )
+
+
+# ---------------------------------------------------------------- thermal
+
+
+def test_steady_state_is_exact_fixed_point():
+    """One backward-Euler step from the steady solution stays there:
+    the stepping reuses the steady assembly, so the fixed point is
+    exact up to float64 roundoff, at any dt."""
+    q = _q([1.5, 0.8, 6.0])
+    steady = lumped_tier_temps(q, **BATCH)
+    state = ThermalState.init(**BATCH)
+    state = dataclasses.replace(state, temps_c=steady.copy())
+    for dt in (1e-4, 0.1, 50.0):
+        state = step_temps(state, q, np.full(3, dt))
+        np.testing.assert_allclose(state.temps_c, steady, rtol=1e-9)
+
+
+def test_transient_converges_to_steady():
+    """Stepping from ambient under constant power converges to the
+    one-shot steady solve, monotonically heating along the way."""
+    q = _q([1.5, 0.8, 6.0])
+    steady = lumped_tier_temps(q, **BATCH)
+    state = ThermalState.init(**BATCH)
+    t_prev = state.t_max_c.copy()
+    for _ in range(400):
+        state = step_temps(state, q, np.full(3, 0.05))
+        assert np.all(state.t_max_c >= t_prev - 1e-9)
+        t_prev = state.t_max_c.copy()
+    alive = state.alive
+    rel = np.abs(state.temps_c - steady)[alive] / np.abs(steady[alive])
+    assert rel.max() < 1e-9
+    # padded tiers stay pinned at ambient
+    assert np.all(state.temps_c[~alive] == C.T_AMBIENT_C)
+
+
+def test_transient_undershoots_steady_midway():
+    """The whole point of the transient model: partway through the
+    ramp the stack is strictly cooler than its steady state."""
+    q = _q([1.5, 0.8, 6.0])
+    steady = lumped_tier_temps(q, **BATCH)
+    state = ThermalState.init(**BATCH)
+    state = step_temps(state, q, np.full(3, 1e-3))
+    alive = state.alive
+    rise = state.temps_c[alive] - C.T_AMBIENT_C
+    rise_steady = steady[alive] - C.T_AMBIENT_C
+    assert np.all(rise > 0)
+    assert np.all(rise < 0.7 * rise_steady)
+
+
+# ------------------------------------------------------------------- spec
+
+
+def test_dvfs_spec_defaults_round_trip():
+    spec = DvfsSpec()
+    again = DvfsSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec
+    assert spec.n_states == 3
+    # top state is the reference operating point: scale factors 1.0
+    sd, ss = spec.scales()
+    assert sd[-1] == 1.0 and ss[-1] == 1.0
+    assert np.all(sd[:-1] < 1.0) and np.all(ss[:-1] < 1.0)
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(freqs_ghz=()),
+        dict(freqs_ghz=(1.0, 0.5)),
+        dict(freqs_ghz=(-1.0, 1.0)),
+        dict(vdds_v=(0.7,)),
+        dict(vdds_v=(0.9, 0.8, 0.7)),
+        dict(throttle_margin_c=-1.0),
+        dict(hysteresis_c=float("nan")),
+        dict(sim_steps=1),
+    ],
+)
+def test_dvfs_spec_rejects(kw):
+    with pytest.raises(ValueError):
+        DvfsSpec(**kw)
+
+
+def test_governor_step_policy():
+    spec = DvfsSpec(freqs_ghz=(0.5, 0.75, 1.0), throttle_margin_c=3.0,
+                    hysteresis_c=5.0)
+    limit = 80.0  # trip at 77, step-up below 72
+    state = np.array([2, 2, 1, 1, 0, 0])
+    temps = np.array([78.0, 74.0, 71.0, np.nan, 77.0, 60.0])
+    out = governor_step(state, temps, limit, spec)
+    # hot -> down; in the hysteresis band -> hold; cool -> up;
+    # NaN -> hold; bottom state saturates; cold bottom steps up
+    assert out.tolist() == [1, 2, 2, 1, 0, 1]
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=5),
+    st.lists(st.floats(min_value=-50.0, max_value=200.0),
+             min_size=1, max_size=8),
+)
+def test_governor_state_always_in_range(n_states, temps):
+    spec = DvfsSpec(freqs_ghz=tuple(0.5 + 0.1 * i for i in range(n_states)))
+    state = np.arange(len(temps)) % n_states
+    for _ in range(4):
+        state = governor_step(state, np.array(temps), 85.0, spec)
+        assert np.all((state >= 0) & (state <= n_states - 1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.floats(min_value=1e5, max_value=1e8),
+    st.floats(min_value=0.5, max_value=20.0),
+    st.floats(min_value=50.0, max_value=95.0),
+)
+def test_governed_run_residency_is_distribution(cycles, power_w, limit_c):
+    """Whatever the quantum and limit, residency rows are probability
+    distributions, sustained <= peak, and the reported excursion is
+    consistent with ``within_limit``."""
+    b = np.ones(2)
+    out = governed_run(
+        compute_cycles=np.array([cycles, cycles / 3]),
+        mem_cycles=np.array([cycles / 2, cycles]),
+        vlink_cycles=np.zeros(2),
+        static_w=b * power_w * 0.3,
+        dynamic_w=b * power_w * 0.7,
+        valid=np.array([True, True]),
+        tiers=np.array([1, 4]),
+        tech=np.array(["2d", "tsv"]),
+        footprint_mm2=np.array([30.0, 8.0]),
+        macs_per_tier=np.array([65536.0, 16384.0]),
+        dvfs=DvfsSpec(sim_steps=16),
+        limit_c=limit_c,
+    )
+    resid = out["residency"]
+    assert np.all(resid >= 0) and np.all(resid <= 1)
+    np.testing.assert_allclose(resid.sum(axis=1), 1.0)
+    assert np.all(out["sustained_per_s"] <= out["peak_per_s"] * (1 + 1e-12))
+    assert np.array_equal(
+        out["within_limit"], out["t_max_transient_c"] < limit_c
+    )
+
+
+# -------------------------------------------------------------- evaluate
+
+
+def _eval(thermal="steady", **kw):
+    grid = DesignGrid.product(WORKLOADS, (2**14, 2**16), (1, 4, 8))
+    return evaluate(grid, metrics=("perf", "area", "power", "thermal"),
+                    thermal=thermal, **kw)
+
+
+def test_steady_evaluate_bit_identical_with_explicit_mode():
+    d0 = _eval().to_dict()
+    d1 = _eval(thermal="steady").to_dict()
+    assert d0.keys() == d1.keys()
+    for k, v in d0.items():
+        np.testing.assert_array_equal(v, d1[k], err_msg=k)
+
+
+def test_transient_evaluate_sustained_group():
+    res = _eval(thermal="transient", dvfs=DvfsSpec(sim_steps=8))
+    ok = res.valid
+    assert ok.any()
+    np.testing.assert_allclose(res.dvfs_residency[ok].sum(axis=1), 1.0)
+    assert np.all(
+        res.peak_per_s[ok] >= res.sustained_per_s[ok] * (1 - 1e-9)
+    )
+    assert np.all(res.peak_vs_sustained[ok] >= 1.0 - 1e-9)
+    assert np.all(np.isfinite(res.t_max_transient_c[ok]))
+    # the governed excursion under a finite trace never exceeds the
+    # infinite-horizon steady temperature
+    assert np.all(
+        res.t_max_transient_c[ok] <= res.t_max_c[ok] + 1e-9
+    )
+
+
+def test_transient_sustained_monotonic_in_limit():
+    """Tightening the thermal limit can only reduce (never raise) the
+    governed sustained throughput."""
+    spec = DvfsSpec(sim_steps=16)
+    hot = _eval(thermal="transient", dvfs=spec, thermal_limit=75.0)
+    cold = _eval(thermal="transient", dvfs=spec, thermal_limit=48.0)
+    ok = hot.valid & cold.valid
+    assert ok.any()
+    assert np.all(
+        cold.sustained_per_s[ok] <= hot.sustained_per_s[ok] * (1 + 1e-12)
+    )
+    # and the top-state residency can only shrink
+    assert np.all(
+        cold.dvfs_residency[ok][:, -1] <= hot.dvfs_residency[ok][:, -1] + 1e-12
+    )
+
+
+# -------------------------------------------------------------- schedule
+
+
+def test_schedule_transient_report_round_trips():
+    stream = lower_network(REGISTRY["smollm-135m"], SHAPES["decode_32k"])
+    rep = schedule(stream, mac_budgets=(2**14,), tiers=(1, 2, 4),
+                   thermal="transient", dvfs=DvfsSpec(sim_steps=8))
+    assert rep.dvfs is not None and rep.dvfs["feasible_transient"]
+    np.testing.assert_allclose(np.sum(rep.dvfs["residency"]), 1.0)
+    assert rep.dvfs["peak_vs_sustained"] >= 1.0 - 1e-12
+    again = NetworkReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert again.to_dict() == rep.to_dict()
+
+
+def test_schedule_steady_identical_with_explicit_mode():
+    stream = lower_network(REGISTRY["smollm-135m"], SHAPES["decode_32k"])
+    r0 = schedule(stream, mac_budgets=(2**14,), tiers=(1, 2))
+    r1 = schedule(stream, mac_budgets=(2**14,), tiers=(1, 2),
+                  thermal="steady")
+    assert r0.to_dict() == r1.to_dict()
+    assert r0.dvfs is None
+
+
+# ------------------------------------------------------ study spec gates
+
+
+def test_analysis_spec_transient_validation():
+    with pytest.raises(ValueError, match="thermal"):
+        AnalysisSpec(kind="evaluate", thermal="bogus")
+    with pytest.raises(ValueError, match="transient"):
+        AnalysisSpec(kind="advise", thermal="transient")
+    with pytest.raises(ValueError, match="thermal"):
+        AnalysisSpec(kind="evaluate", thermal="transient",
+                     metrics=("perf",))
+    with pytest.raises(ValueError, match="transient"):
+        AnalysisSpec(kind="evaluate", dvfs=DvfsSpec())
+    spec = AnalysisSpec(kind="evaluate", thermal="transient")
+    assert spec.dvfs == DvfsSpec()
+    # dict coercion (the JSON path)
+    spec2 = AnalysisSpec(kind="evaluate", thermal="transient",
+                         dvfs={"freqs_ghz": [0.6, 1.0]})
+    assert isinstance(spec2.dvfs, DvfsSpec)
+    assert spec2.dvfs.freqs_ghz == (0.6, 1.0)
+
+
+def test_transient_study_json_round_trip():
+    study = Study(
+        name="t",
+        workload=WorkloadSpec(kind="gemms", gemms=tuple(WORKLOADS)),
+        space=SpaceSpec(mac_budgets=(2**14,), tiers=(1, 4)),
+        analysis=AnalysisSpec(kind="evaluate", thermal="transient",
+                              dvfs=DvfsSpec(sim_steps=8)),
+    )
+    again = Study.from_json(study.to_json())
+    assert again == study
+    assert again.analysis.dvfs.sim_steps == 8
+
+
+# ------------------------------------------------- serve: the pinned flip
+
+
+def _flip_study(thermal):
+    """The thermal bench scenario (see benchmarks/thermal_bench.py):
+    per-tier-budget-matched grid where the 8-tier stack runs hotter
+    than the small 2D die, under a limit between their steady temps."""
+    traffic = TrafficSpec(
+        arrival_rps=2048.0, n_requests=8, prompt_dist="lognormal",
+        prompt_mean=128, prompt_max=512, output_dist="lognormal",
+        output_mean=24, output_max=96, sigma=0.6, max_batch=4,
+        policy="continuous", chunk_prefill=64, seed=0,
+    )
+    return Study(
+        name=f"flip-{thermal}",
+        workload=WorkloadSpec(kind="network", arch="qwen2.5-3b",
+                              shape="decode_32k"),
+        space=SpaceSpec(mac_budgets=(2**14, 2**18), tiers=(1, 8)),
+        constraints=ConstraintSpec(thermal_limit_c=54.4),
+        analysis=AnalysisSpec(
+            kind="serve", thermal=thermal,
+            bandwidth=BandwidthSpec.paper_default(),
+            serve=ServeSpec(traffic=traffic),
+        ),
+    )
+
+
+def test_serve_flip_steady_infeasible_3d_wins_sustained():
+    steady = _flip_study("steady").run().payload["points"]
+    pts = _flip_study("transient").run().payload["points"]
+    np.testing.assert_array_equal(steady["feasible"], pts["feasible_steady"])
+    ok = pts["valid"]
+    np.testing.assert_allclose(pts["dvfs_residency"][ok].sum(axis=1), 1.0)
+    assert np.all(pts["peak_vs_sustained"][ok] >= 1.0 - 1e-12)
+    flip = pts["feasible"] & ~pts["feasible_steady"] & (pts["tiers"] > 1)
+    base = pts["feasible_steady"] & (pts["tiers"] == 1)
+    assert flip.any() and base.any()
+    best3d = pts["gen_tok_s"][flip].max()
+    best2d = pts["gen_tok_s"][base].max()
+    # the steady gate threw away the fastest buildable design
+    assert best3d > best2d
+    assert np.all(pts["t_max_transient_c"][pts["feasible"]] < 54.4)
+
+
+def test_serve_steady_payload_unchanged_by_mode_flag():
+    """The steady serve payload carries no transient keys and is
+    byte-identical whether thermal='steady' is defaulted or explicit."""
+    pts = _flip_study("steady").run().payload["points"]
+    assert "t_max_transient_c" not in pts
+    assert "dvfs_residency" not in pts
+    assert "peak_tok_s" not in pts
