@@ -99,6 +99,44 @@ def vlink_scenario():
     }
 
 
+def fold_scenario():
+    """The vlink technology decides the best intra-layer fold.
+
+    ``(M, K, N) = (12, 7000, 12)`` on a 4x4 array across 3 tiers: the
+    contraction is deep but the array is tiny, so folding the output
+    rows (fold-m) saves ~0.4% of compute cycles over the native fold-K
+    — but only if the L-1 partial-sum planes it creates drain fast
+    enough. MIVs (17 bits/MAC) swallow them; the shared TSV bus
+    (17/16 bits/MAC) turns the same mapping vlink-bound at ~1.9x the
+    cycles. One workload, one array — two technologies, two best
+    folds. The row asserts the flip so the regression is pinned here
+    as well as in ``tests/test_bandwidth.py``.
+    """
+    from repro.core.pricing import price_steps
+
+    spec = BandwidthSpec.paper_default()
+    out = {}
+    for tech in ("tsv", "miv"):
+        cyc = {}
+        for fold in (None, "m"):
+            pr = price_steps(
+                "os", np.array([12]), np.array([7000]), np.array([12]),
+                np.array([4]), np.array([4]), np.array([3]),
+                np.array([tech]), spec, fold=fold,
+            )
+            cyc["native_k" if fold is None else "fold_m"] = float(
+                pr["total_cycles"][0])
+        out[tech] = cyc
+    assert out["miv"]["fold_m"] < out["miv"]["native_k"], out
+    assert out["tsv"]["fold_m"] > out["tsv"]["native_k"], out
+    return {
+        "workload": [12, 7000, 12],
+        "design": "os, 4x4 array, 3 tiers, paper-default memory",
+        "cycles": out,
+        "flip": "miv -> fold_m wins; tsv -> native fold-k wins",
+    }
+
+
 def run(n_workloads: int = 300, seed: int = 0):
     spec = BandwidthSpec.paper_default()
     study = Study(
@@ -140,6 +178,7 @@ def run(n_workloads: int = 300, seed: int = 0):
         "scalar_match": True,
         "uncapped_identity": True,
         "vlink_scenario": vlink_scenario(),
+        "fold_scenario": fold_scenario(),
     }
 
 
@@ -157,6 +196,7 @@ def bench_roofline():
          f"bw-aware {out['speedup_max_bw']:.2f}x"),
         ("roofline/vlink_binds", 0.0,
          f"short-K dos/tsv: bounds {vl['bound_counts']}"),
+        ("roofline/fold_flip", 0.0, out["fold_scenario"]["flip"]),
     ]
 
 

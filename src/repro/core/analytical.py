@@ -44,6 +44,9 @@ __all__ = [
     "tau_ws",
     "tau_is",
     "dataflow_dims",
+    "FOLD_NAMES",
+    "native_fold",
+    "fold_dims",
     "optimize_rc_batched",
     "optimize_array_2d",
     "optimize_array_3d",
@@ -174,6 +177,69 @@ def dataflow_dims(dataflow: str, M, K, N, tiers):
     if dataflow == "is":
         return M, K, _ceil_div(N, L)
     raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+#: the three tier folds: which GEMM dimension the stack of l tiers
+#: partitions. Canonical candidate order for the ``tier_fold`` policy.
+FOLD_NAMES = ("m", "k", "n")
+
+
+def native_fold(dataflow: str) -> str:
+    """The dataflow's *paper* tier split — the dimension its 3D
+    extension already folds across tiers.
+
+    os/dos fold the contraction dim K (Eq. 2's ``ceil(K/l) + l - 1``);
+    ws folds the temporal M; is folds the temporal N. ``fold_dims``
+    with the native fold is exactly ``dataflow_dims``.
+    """
+    if dataflow in ("os", "dos"):
+        return "k"
+    if dataflow == "ws":
+        return "m"
+    if dataflow == "is":
+        return "n"
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def fold_dims(fold: str | None, dataflow: str, M, K, N, tiers):
+    """(D_rows, D_cols, T_serial) of a dataflow under a chosen tier fold.
+
+    A *fold* names which GEMM dimension the l tiers partition. The
+    native fold (``native_fold(dataflow)``, or ``fold=None``) is the
+    paper's 3D extension and returns ``dataflow_dims`` unchanged. The
+    two non-native folds split a different dimension into balanced
+    ``ceil``-sized per-tier slices; each tier then runs the dataflow's
+    own 2D schedule on its slice:
+
+    - splitting an output dim (m or n for os/dos; n for ws; m for is)
+      yields l independent sub-GEMMs: the split dim shrinks to
+      ``ceil(dim/l)`` and the serial/temporal term runs at full depth;
+    - splitting the contraction dim K on ws/is mirrors dOS: the K
+      extent of the spatial map shrinks to ``ceil(K/l)`` and the
+      temporal term pays ``l - 1`` cross-tier partial-sum adds.
+
+    All triples degenerate to the dataflow's 2D dims at ``tiers == 1``,
+    so every fold is exactly the native mapping on a single tier.
+    """
+    if fold is None or fold == native_fold(dataflow):
+        return dataflow_dims(dataflow, M, K, N, tiers)
+    M, K, N, L = (np.asarray(x, dtype=np.int64) for x in (M, K, N, tiers))
+    if dataflow in ("os", "dos"):
+        if fold == "m":
+            return _ceil_div(M, L), N, K
+        if fold == "n":
+            return M, _ceil_div(N, L), K
+    elif dataflow == "ws":
+        if fold == "k":
+            return N, _ceil_div(K, L), M + L - 1
+        if fold == "n":
+            return _ceil_div(N, L), K, M
+    elif dataflow == "is":
+        if fold == "k":
+            return M, _ceil_div(K, L), N + L - 1
+        if fold == "m":
+            return _ceil_div(M, L), K, N
+    raise ValueError(f"unknown fold {fold!r} for dataflow {dataflow!r}")
 
 
 def _search_rc(xp, D1, D2, Tser, budget, r_max_total: int):

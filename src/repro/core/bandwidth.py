@@ -65,6 +65,25 @@ split a temporal dimension and exchange nothing — see
 boundaries moves the R x C partial-sum plane (bytes_acc per word). The
 boundaries operate concurrently, so the vlink service time is one
 boundary's traffic over one boundary's bandwidth.
+
+Fold traffic model (``fold_traffic_batched``, the ``tier_fold``
+policy's pricing). A non-native fold re-partitions the GEMM across
+tiers (see ``analytical.fold_dims``); the traffic convention is the
+one the native model already uses: each tier's *own* operand and
+result slices ride the planar distribution network and are priced by
+the DRAM term alone — vertical links carry only the traffic the fold
+*creates* across tier boundaries:
+
+- folding the contraction dim K on ws/is mirrors dOS: every fold
+  pushes an R x C partial-sum plane down each of the L - 1 boundaries;
+- folding an output dim (m/n) makes the l tiers independent sub-GEMMs
+  that all consume the *same* copy of the non-split operand (fold-m
+  shares B, fold-n shares A): that operand's DRAM stream is multicast
+  down the pile, so each of the L - 1 boundaries carries one copy of
+  the stream and the vlink service time is the stream over one
+  boundary's bandwidth. Splitting an output dim also *cuts* the shared
+  operand's re-stream count (the per-tier fold count over the split
+  dim shrinks by ~l) — the fold's DRAM-side win.
 """
 
 from __future__ import annotations
@@ -81,6 +100,7 @@ __all__ = [
     "BandwidthSpec",
     "TSV_VLINK_SHARE",
     "bound_names",
+    "fold_traffic_batched",
     "gemm_traffic_batched",
     "resolve_vlink_bits",
     "roofline_cycles",
@@ -335,6 +355,175 @@ def gemm_traffic_batched(dataflow: str, M, K, N, R, Cc, L, tech, spec: Bandwidth
         )
 
     raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def fold_traffic_batched(fold, dataflow: str, M, K, N, R, Cc, L, tech,
+                         spec: BandwidthSpec, sram_bytes=None):
+    """Traffic + working set of a GEMM batch under a chosen tier fold.
+
+    Same contract as ``gemm_traffic_batched`` (which it returns
+    verbatim for the dataflow's native fold or ``fold=None`` — the
+    identity that keeps the fixed/per_layer policies bit-stable), plus
+    the two non-native folds per dataflow, priced under the module's
+    fold traffic convention (module docstring): per-tier slices ride
+    the planar network (DRAM term), vertical links carry only
+    fold-created traffic — dOS-style partial-sum planes for a
+    non-native fold-k, the shared operand's multicast stream for an
+    output-dim fold. ``tests/oracle_fold.py`` reprices every branch
+    with explicit per-tier/per-boundary loops; the differential tests
+    assert bit-for-bit agreement.
+    """
+    from .analytical import native_fold
+
+    if fold is None or fold == native_fold(dataflow):
+        return gemm_traffic_batched(dataflow, M, K, N, R, Cc, L, tech, spec,
+                                    sram_bytes=sram_bytes)
+    M, K, N, R, Cc, L = (np.asarray(x, dtype=np.float64) for x in (M, K, N, R, Cc, L))
+    bi, ba = float(spec.bytes_in), float(spec.bytes_acc)
+    sram = (
+        spec.sram_bytes
+        if sram_bytes is None
+        else np.asarray(sram_bytes, dtype=np.float64)
+    )
+    vbits = resolve_vlink_bits(spec, tech)
+
+    def _stream_vlink(stream_bytes):
+        # The shared operand's DRAM stream is multicast down the pile:
+        # all L - 1 boundaries carry one copy each; service time is the
+        # stream over one boundary's concurrent bandwidth.
+        with np.errstate(divide="ignore"):
+            per_boundary_bw = R * Cc * vbits / 8.0
+            cycles = np.where(L > 1.0, stream_bytes / per_boundary_bw, 0.0)
+        return np.where(L > 1.0, (L - 1.0) * stream_bytes, 0.0), cycles
+
+    if dataflow in ("os", "dos"):
+        base = R * Cc * ba + 2.0 * (R + Cc) * bi
+        a_tile = R * K * bi  # full-K row tile: the fold keeps K whole
+        if fold == "m":
+            Mt = _ceil(M, L)
+            foldMt = _ceil(Mt, R)
+            foldN = _ceil(N, Cc)
+            b_slice = K * N * bi  # B is shared whole across tiers
+            reuse_a = base + a_tile <= sram
+            reuse_b = reuse_a & (base + a_tile + b_slice <= sram)
+            a_bytes = np.where(reuse_a, 1.0, foldN) * M * K * bi
+            b_stream = np.where(reuse_b, 1.0, foldMt) * K * N * bi
+            o_bytes = M * N * ba
+            vlink_bytes, vlink_cycles = _stream_vlink(b_stream)
+            return dict(
+                dram_bytes=a_bytes + b_stream + o_bytes,
+                vlink_bytes=vlink_bytes,
+                vlink_cycles=vlink_cycles,
+                sram_need_bytes=base,
+            )
+        if fold == "n":
+            Nt = _ceil(N, L)
+            foldM = _ceil(M, R)
+            foldNt = _ceil(Nt, Cc)
+            b_slice = K * Nt * bi  # per-tier column slice of B
+            reuse_a = base + a_tile <= sram
+            reuse_b = reuse_a & (base + a_tile + b_slice <= sram)
+            a_stream = np.where(reuse_a, 1.0, foldNt) * M * K * bi
+            b_bytes = np.where(reuse_b, 1.0, foldM) * K * N * bi
+            o_bytes = M * N * ba
+            vlink_bytes, vlink_cycles = _stream_vlink(a_stream)
+            return dict(
+                dram_bytes=a_stream + b_bytes + o_bytes,
+                vlink_bytes=vlink_bytes,
+                vlink_cycles=vlink_cycles,
+                sram_need_bytes=base,
+            )
+
+    if dataflow == "ws":
+        base = R * Cc * bi + 2.0 * (R * ba + Cc * bi)
+        stationary_bytes = K * N * bi  # weights, loaded once
+        if fold == "k":
+            # dOS-style contraction split: partial-sum planes down the pile.
+            Kt = _ceil(K, L)
+            foldN = _ceil(N, R)
+            foldKt = _ceil(Kt, Cc)
+            a_resident = M * Kt * bi  # per-tier K slice, full temporal M
+            reuse_a = base + a_resident <= sram
+            a_bytes = np.where(reuse_a, 1.0, foldN) * M * K * bi
+            o_tile = M * R * ba
+            o_fits = base + np.where(reuse_a, a_resident, 0.0) + o_tile <= sram
+            o_bytes = np.where(o_fits, 1.0, 2.0 * foldKt - 1.0) * M * N * ba
+            folds = foldN * foldKt
+            vlink_bytes = np.where(L > 1.0, (L - 1.0) * folds * R * Cc * ba, 0.0)
+            with np.errstate(divide="ignore"):
+                per_boundary_bw = R * Cc * vbits / 8.0
+                vlink_cycles = np.where(
+                    L > 1.0, folds * R * Cc * ba / per_boundary_bw, 0.0
+                )
+            return dict(
+                dram_bytes=stationary_bytes + a_bytes + o_bytes,
+                vlink_bytes=vlink_bytes,
+                vlink_cycles=vlink_cycles,
+                sram_need_bytes=base,
+            )
+        if fold == "n":
+            Nt = _ceil(N, L)
+            foldNt = _ceil(Nt, R)
+            foldK = _ceil(K, Cc)
+            a_resident = M * K * bi  # every tier consumes all of A
+            reuse_a = base + a_resident <= sram
+            a_stream = np.where(reuse_a, 1.0, foldNt) * M * K * bi
+            o_tile = M * R * ba
+            o_fits = base + np.where(reuse_a, a_resident, 0.0) + o_tile <= sram
+            o_bytes = np.where(o_fits, 1.0, 2.0 * foldK - 1.0) * M * N * ba
+            vlink_bytes, vlink_cycles = _stream_vlink(a_stream)
+            return dict(
+                dram_bytes=stationary_bytes + a_stream + o_bytes,
+                vlink_bytes=vlink_bytes,
+                vlink_cycles=vlink_cycles,
+                sram_need_bytes=base,
+            )
+
+    if dataflow == "is":
+        base = R * Cc * bi + 2.0 * (R * ba + Cc * bi)
+        stationary_bytes = M * K * bi  # inputs, loaded once
+        if fold == "k":
+            Kt = _ceil(K, L)
+            foldM = _ceil(M, R)
+            foldKt = _ceil(Kt, Cc)
+            b_resident = N * Kt * bi
+            reuse_b = base + b_resident <= sram
+            b_bytes = np.where(reuse_b, 1.0, foldM) * K * N * bi
+            o_tile = N * R * ba
+            o_fits = base + np.where(reuse_b, b_resident, 0.0) + o_tile <= sram
+            o_bytes = np.where(o_fits, 1.0, 2.0 * foldKt - 1.0) * M * N * ba
+            folds = foldM * foldKt
+            vlink_bytes = np.where(L > 1.0, (L - 1.0) * folds * R * Cc * ba, 0.0)
+            with np.errstate(divide="ignore"):
+                per_boundary_bw = R * Cc * vbits / 8.0
+                vlink_cycles = np.where(
+                    L > 1.0, folds * R * Cc * ba / per_boundary_bw, 0.0
+                )
+            return dict(
+                dram_bytes=stationary_bytes + b_bytes + o_bytes,
+                vlink_bytes=vlink_bytes,
+                vlink_cycles=vlink_cycles,
+                sram_need_bytes=base,
+            )
+        if fold == "m":
+            Mt = _ceil(M, L)
+            foldMt = _ceil(Mt, R)
+            foldK = _ceil(K, Cc)
+            b_resident = N * K * bi  # every tier consumes all of B
+            reuse_b = base + b_resident <= sram
+            b_stream = np.where(reuse_b, 1.0, foldMt) * K * N * bi
+            o_tile = N * R * ba
+            o_fits = base + np.where(reuse_b, b_resident, 0.0) + o_tile <= sram
+            o_bytes = np.where(o_fits, 1.0, 2.0 * foldK - 1.0) * M * N * ba
+            vlink_bytes, vlink_cycles = _stream_vlink(b_stream)
+            return dict(
+                dram_bytes=stationary_bytes + b_stream + o_bytes,
+                vlink_bytes=vlink_bytes,
+                vlink_cycles=vlink_cycles,
+                sram_need_bytes=base,
+            )
+
+    raise ValueError(f"unknown fold {fold!r} for dataflow {dataflow!r}")
 
 
 def roofline_cycles(compute_cycles, mem_cycles, vlink_cycles):

@@ -26,7 +26,7 @@ import dataclasses
 
 import numpy as np
 
-from .analytical import _ceil_div, tau_is, tau_ws
+from .analytical import _ceil_div, fold_dims, native_fold, tau_is, tau_ws
 
 __all__ = [
     "Dataflow",
@@ -88,7 +88,8 @@ class Activity:
     mac_ops_total: float
 
 
-def activity_batched(M, K, N, R, C, tiers, dataflow: str = "dos") -> Activity:
+def activity_batched(M, K, N, R, C, tiers, dataflow: str = "dos",
+                     fold: str | None = None) -> Activity:
     """Batched activity factors for one dataflow over arrays of designs.
 
     All arguments broadcast; the returned ``Activity`` carries float64
@@ -113,11 +114,33 @@ def activity_batched(M, K, N, R, C, tiers, dataflow: str = "dos") -> Activity:
     useful MAC) but have **zero** vertical activity: extended to 3D they
     split their temporal dimension across tiers with no cross-tier
     traffic (Sec. III-C), which is why the paper focuses on dOS.
+
+    ``fold`` selects a non-native tier fold (``analytical.fold_dims``):
+    cycles come from the fold's (D1, D2, T) triple; vertical hops are a
+    dOS-style R*C*(L-1) plane per fold when the contraction dim is
+    split, or the shared operand's compulsory multicast — (L-1) copies
+    of its K*N (fold-m) / M*K (fold-n) words — when an output dim is.
+    The fold's in-plane delivery keeps the generic 2-hops-per-MAC
+    model. ``fold=None`` or the dataflow's native fold is the existing
+    model, bit-for-bit.
     """
     M, K, N, R, C, L = np.broadcast_arrays(
         *(np.asarray(x, dtype=np.int64) for x in (M, K, N, R, C, tiers))
     )
-    if dataflow in ("os", "dos"):
+    if fold is not None and fold != native_fold(dataflow):
+        D1, D2, Tser = fold_dims(fold, dataflow, M, K, N, L)
+        folds = _ceil_div(D1, R) * _ceil_div(D2, C)
+        cycles = ((2 * R + C + Tser - 2) * folds).astype(np.float64)
+        if fold == "k":  # ws/is contraction split: partial-sum planes
+            v_hops = np.where(L > 1, R * C * (L - 1) * folds, 0).astype(np.float64)
+        else:  # output-dim split: multicast the shared operand once
+            shared_words = K * N if fold == "m" else M * K
+            v_hops = np.where(L > 1, (L - 1) * shared_words, 0).astype(np.float64)
+        with np.errstate(invalid="ignore", divide="ignore"):
+            v_act = np.where(
+                L > 1, v_hops / (cycles * R * C * np.maximum(L - 1, 1)), 0.0
+            )
+    elif dataflow in ("os", "dos"):
         kl = _ceil_div(K, L)
         folds = _ceil_div(M, R) * _ceil_div(N, C)
         tau_fold = 2 * R + C + kl + L - 3  # == 2R + C + K - 2 at l = 1

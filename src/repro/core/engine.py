@@ -42,15 +42,18 @@ from typing import Sequence
 import numpy as np
 
 from .analytical import (
+    FOLD_NAMES,
     INVALID_CYCLES,
     _search_rc,
     _square_rc,
-    dataflow_dims,
+    fold_dims,
+    native_fold,
 )
 from .bandwidth import (
     BOUND_NAMES,
     BandwidthSpec,
     bound_names,
+    fold_traffic_batched,
     gemm_traffic_batched,
     roofline_cycles,
 )
@@ -58,8 +61,10 @@ from .dataflow import activity_batched
 from .params import (
     VALID_BACKENDS,
     VALID_DATAFLOWS,
+    VALID_FOLDS,
     VALID_METRICS,
     VALID_MODES,
+    VALID_SCHEDULE_POLICIES,
     VALID_TECHS,
     VALID_THERMAL_MODES,
     validate_option,
@@ -74,6 +79,7 @@ from .pricing import (
     dram_bytes_per_cycle,
     governed_run,
     governor_step,
+    price_steps,
     scale_power,
 )
 
@@ -151,6 +157,12 @@ class DesignGrid:
     ``evaluate()`` runs with a ``BandwidthSpec`` — the per-point values
     override the spec's scalar ``dram_gbs`` / ``sram_kib_per_tier`` —
     and are ignored (with the spec's scalars used grid-wide) otherwise.
+
+    ``fold`` (optional, 'm' | 'k' | 'n', scalar or (P,)) makes the
+    per-layer tier fold a design axis (``analytical.fold_dims``): which
+    GEMM dimension the l tiers partition. ``None`` (default) is the
+    dataflow's native fold everywhere — the paper's tier split,
+    bit-identical to the pre-fold engine.
     """
 
     workloads: np.ndarray
@@ -163,11 +175,14 @@ class DesignGrid:
     mode: str = "opt"
     dram_gbs: np.ndarray | None = None
     sram_kib: np.ndarray | None = None
+    fold: str | np.ndarray | None = None
 
     def __post_init__(self):
         validate_options("dataflow", self.dataflow, VALID_DATAFLOWS)
         validate_options("tech", self.tech, VALID_TECHS)
         validate_option("mode", self.mode, VALID_MODES)
+        if self.fold is not None:
+            validate_options("fold", self.fold, VALID_FOLDS)
         wl = np.atleast_2d(np.asarray(self.workloads, dtype=np.int64))
         if wl.ndim != 2 or wl.shape[1] != 3:
             raise ValueError(f"workloads must be (W, 3) of (M, K, N), got {wl.shape}")
@@ -188,9 +203,9 @@ class DesignGrid:
                 if not np.all(arr > 0):
                     raise ValueError(f"{name} values must be > 0")
                 per_point[name] = arr
-        for name in ("dataflow", "tech"):
+        for name in ("dataflow", "tech", "fold"):
             v = getattr(self, name)
-            if not isinstance(v, str):
+            if v is not None and not isinstance(v, str):
                 per_point[name] = np.atleast_1d(np.asarray(v))
         try:
             P = np.broadcast_shapes(*(a.shape for a in per_point.values()))[0]
@@ -244,8 +259,10 @@ class DesignGrid:
             v = getattr(self, name)
             if v is not None:
                 kw[name] = v[lo:hi]
-        for name in ("dataflow", "tech"):
+        for name in ("dataflow", "tech", "fold"):
             v = getattr(self, name)
+            if name == "fold" and v is None:
+                continue
             kw[name] = v if isinstance(v, str) else v[lo:hi]
         return DesignGrid(**kw)
 
@@ -255,8 +272,11 @@ class DesignGrid:
         for name in ("tiers", "mac_budgets", "rows", "cols", "dram_gbs", "sram_kib"):
             v = getattr(self, name)
             out[name] = None if v is None else np.asarray(v).tolist()
-        for name in ("dataflow", "tech"):
+        for name in ("dataflow", "tech", "fold"):
             v = getattr(self, name)
+            if name == "fold" and v is None:
+                out[name] = None
+                continue
             out[name] = v if isinstance(v, str) else [str(x) for x in v]
         out["mode"] = self.mode
         return out
@@ -267,7 +287,7 @@ class DesignGrid:
         for name in ("mac_budgets", "rows", "cols", "dram_gbs", "sram_kib"):
             if d.get(name) is not None:
                 kw[name] = d[name]
-        for name in ("dataflow", "tech"):
+        for name in ("dataflow", "tech", "fold"):
             v = d.get(name)
             if v is not None:
                 kw[name] = v if isinstance(v, str) else np.asarray(v)
@@ -618,12 +638,12 @@ def _search_from_tables(tables, sel, Tser, r_max: int):
 
 
 def _optimize_flat(M, K, N, n_macs, tiers, dataflow, mode, backend, chunk,
-                   n_shards: int = 1):
+                   n_shards: int = 1, fold: str | None = None):
     """Batched shape optimization (flat arrays) honoring invalid budgets."""
     budget = n_macs // tiers
     ok = budget >= 1
     bsafe = np.maximum(budget, 1)
-    D1, D2, Tser = dataflow_dims(dataflow, M, K, N, tiers)
+    D1, D2, Tser = fold_dims(fold, dataflow, M, K, N, tiers)
     if mode == "square":
         r, c, t = _square_rc(np, D1, D2, Tser, bsafe)
     else:
@@ -781,6 +801,26 @@ def _evaluate_block(
     )
     dff = np.tile(df_p, W)
 
+    # Group the flat batch by (dataflow, fold): every model below is
+    # uniform within a group. With no fold axis the groups are exactly
+    # the historical per-dataflow groups (fold=None -> native mapping).
+    if grid.fold is None:
+        groups = [
+            (str(df), None, np.nonzero(dff == df)[0]) for df in np.unique(dff)
+        ]
+    else:
+        fold_p = (
+            np.full(P, grid.fold)
+            if isinstance(grid.fold, str)
+            else np.asarray(grid.fold)
+        )
+        foldf = np.tile(fold_p, W)
+        key = np.char.add(np.char.add(dff.astype("U8"), ":"), foldf.astype("U8"))
+        groups = []
+        for kk in np.unique(key):
+            df, fo = str(kk).split(":")
+            groups.append((df, fo, np.nonzero(key == kk)[0]))
+
     rows = np.empty(W * P, dtype=np.int64)
     cols = np.empty(W * P, dtype=np.int64)
     cyc = np.full(W * P, INVALID_CYCLES, dtype=np.int64)
@@ -788,28 +828,29 @@ def _evaluate_block(
     rows2d = np.ones(W * P, dtype=np.int64)
     cols2d = np.ones(W * P, dtype=np.int64)
 
-    for df in np.unique(dff):
-        sel = np.nonzero(dff == df)[0]
+    for df, fo, sel in groups:
         M_, K_, N_, L_, b_ = Mf[sel], Kf[sel], Nf[sel], Lf[sel], budgetf[sel]
         if grid.rows is not None:
             rows[sel] = np.tile(grid.rows, W)[sel]
             cols[sel] = np.tile(grid.cols, W)[sel]
-            D1, D2, Tser = dataflow_dims(str(df), M_, K_, N_, L_)
+            D1, D2, Tser = fold_dims(fo, df, M_, K_, N_, L_)
             r_, c_ = rows[sel], cols[sel]
             cyc[sel] = (2 * r_ + c_ + Tser - 2) * (-(-D1 // r_)) * (-(-D2 // c_))
         else:
             r_, c_, t_ = _optimize_flat(
-                M_, K_, N_, b_, L_, str(df), grid.mode, backend, chunk, n_shards
+                M_, K_, N_, b_, L_, df, grid.mode, backend, chunk, n_shards,
+                fold=fo,
             )
             rows[sel], cols[sel], cyc[sel] = r_, c_, t_
         # Budget-matched optimized 2D baseline of the same dataflow
-        # family. Dedupe (workload, budget): within `sel` the baseline
+        # family (native mapping: every fold degenerates to it on one
+        # tier). Dedupe (workload, budget): within `sel` the baseline
         # is constant across tier counts.
-        key = np.stack([M_, K_, N_, b_], axis=1)
-        uniq, inv = np.unique(key, axis=0, return_inverse=True)
+        wkey = np.stack([M_, K_, N_, b_], axis=1)
+        uniq, inv = np.unique(wkey, axis=0, return_inverse=True)
         r2, c2, t2 = _optimize_flat(
             uniq[:, 0], uniq[:, 1], uniq[:, 2], uniq[:, 3],
-            np.ones(len(uniq), dtype=np.int64), str(df), grid.mode,
+            np.ones(len(uniq), dtype=np.int64), df, grid.mode,
             backend, chunk, n_shards,
         )
         cyc2d[sel] = t2[inv]
@@ -848,12 +889,11 @@ def _evaluate_block(
             sram_cap = bandwidth.sram_bytes
         tech2d = np.full(W * P, "2d")
         ones = np.ones(W * P, dtype=np.int64)
-        for df in np.unique(dff):
-            sel = np.nonzero(dff == df)[0]
+        for df, fo, sel in groups:
             sram_sel = None if grid.sram_kib is None else sram_cap[sel]
             bpc_sel = bpc if np.isscalar(bpc) else bpc[sel]
-            tr = gemm_traffic_batched(
-                str(df), Mf[sel], Kf[sel], Nf[sel],
+            tr = fold_traffic_batched(
+                fo, df, Mf[sel], Kf[sel], Nf[sel],
                 rows[sel], cols[sel], Lf[sel], techf[sel], bandwidth,
                 sram_bytes=sram_sel,
             )
@@ -865,7 +905,7 @@ def _evaluate_block(
             # Budget-matched 2D baseline under the same memory system
             # (its own searched shape; tech '2d' has no vertical links).
             tr2 = gemm_traffic_batched(
-                str(df), Mf[sel], Kf[sel], Nf[sel],
+                df, Mf[sel], Kf[sel], Nf[sel],
                 rows2d[sel], cols2d[sel], ones[sel], tech2d[sel], bandwidth,
                 sram_bytes=sram_sel,
             )
@@ -909,10 +949,10 @@ def _evaluate_block(
         mac_a = np.zeros(W * P)
         hl_a = np.zeros(W * P)
         vl_a = np.zeros(W * P)
-        for df in np.unique(dff):
-            sel = np.nonzero(dff == df)[0]
+        for df, fo, sel in groups:
             a = activity_batched(
-                Mf[sel], Kf[sel], Nf[sel], rows[sel], cols[sel], Lf[sel], str(df)
+                Mf[sel], Kf[sel], Nf[sel], rows[sel], cols[sel], Lf[sel], df,
+                fold=fo,
             )
             mac_a[sel], hl_a[sel], vl_a[sel] = a.mac, a.hlink, a.vlink
         res.update(
@@ -937,11 +977,10 @@ def _evaluate_block(
 
     if "power" in metrics:
         pw = {}
-        for df in np.unique(dff):
-            sel = np.nonzero(dff == df)[0]
+        for df, fo, sel in groups:
             p = array_power_batched(
                 Mf[sel], Kf[sel], Nf[sel], rows[sel], cols[sel], Lf[sel],
-                techf[sel], str(df),
+                techf[sel], df, fold=fo,
             )
             for k, v in p.items():
                 pw.setdefault(k, np.zeros(W * P))[sel] = v
@@ -1150,19 +1189,30 @@ class NetworkReport:
     #: steady-state runs / pre-transient artifacts): states, residency,
     #: peak vs sustained pass time, governed excursion, feasibility.
     dvfs: dict | None = None
+    #: fine-grain tier-folded policy (None unless schedule ran with
+    #: 'tier_fold' in ``policies``): one fixed array, but each layer
+    #: picks its best per-tier partition (m/k/n fold) on it.
+    tier_fold: PolicyResult | None = None
+    #: tier_fold bookkeeping: {'by_layer': [fold name per layer],
+    #: 'residency': {fold: count-weighted cycle share}}.
+    fold: dict | None = None
 
     def to_dict(self) -> dict:
         out = dataclasses.asdict(self)
-        for pol in ("per_layer", "fixed"):
-            out[pol]["design"] = np.asarray(out[pol]["design"]).tolist()
+        for pol in ("per_layer", "fixed", "tier_fold"):
+            if out.get(pol) is not None:
+                out[pol]["design"] = np.asarray(out[pol]["design"]).tolist()
         return out
 
     @classmethod
     def from_dict(cls, d: dict) -> "NetworkReport":
-        """Inverse of ``to_dict`` (lossless up to JSON float text)."""
+        """Inverse of ``to_dict`` (lossless up to JSON float text);
+        pre-fold artifacts restore with ``tier_fold``/``fold`` None."""
         kw = dict(d)
-        for pol in ("per_layer", "fixed"):
-            v = d[pol]
+        for pol in ("per_layer", "fixed", "tier_fold"):
+            v = d.get(pol)
+            if v is None:
+                continue
             kw[pol] = v if isinstance(v, PolicyResult) else PolicyResult.from_dict(v)
         return cls(**kw)
 
@@ -1386,6 +1436,7 @@ def schedule(
     bandwidth: BandwidthSpec | dict | None = None,
     thermal: str = "steady",
     dvfs: DvfsSpec | dict | None = None,
+    policies: Sequence[str] = ("per_layer", "fixed"),
 ) -> NetworkReport:
     """Evaluate a whole lowered network stream on the design grid.
 
@@ -1403,6 +1454,23 @@ def schedule(
       the buildable accelerator. Its candidate set contains every
       layer's optimum, so ``fixed.total_cycles >=
       per_layer.total_cycles`` by construction.
+    - ``tier_fold`` (opt-in via ``policies``): one fixed array, but
+      each layer additionally picks its best per-tier partition of the
+      GEMM — fold-m / fold-k / fold-n (``analytical.fold_dims``) —
+      with the cross-tier reduction / operand-multicast traffic priced
+      on the vertical links (``bandwidth.fold_traffic_batched``, via
+      ``pricing.price_steps``). The native fold is always a candidate
+      and prices identically to the fixed policy's cycles, so
+      ``tier_fold.total_cycles <= fixed.total_cycles`` by construction
+      (equality at one tier, where every fold degenerates to native).
+      Per-fold SRAM working sets join the feasibility mask; the
+      thermal verdict is inherited from the design's native-mapping
+      evaluation (folds redistribute the same work across the same
+      stack).
+
+    ``policies`` must contain 'per_layer' and 'fixed' (the report's
+    backbone); add 'tier_fold' for the folded policy + the report's
+    ``fold`` residency dict.
 
     Thermal feasibility is first-class: designs whose lumped stack
     temperature reaches ``thermal_limit`` [degC] are excluded from both
@@ -1434,6 +1502,15 @@ def schedule(
     validate_option("tech", tech, VALID_TECHS)
     validate_option("backend", backend, VALID_BACKENDS)
     validate_option("thermal", thermal, VALID_THERMAL_MODES)
+    policies = tuple(
+        validate_option("policy", p, VALID_SCHEDULE_POLICIES) for p in policies
+    )
+    for need in ("per_layer", "fixed"):
+        if need not in policies:
+            raise ValueError(
+                f"policies must include {need!r} (got {policies!r}); "
+                "'tier_fold' is the opt-in extra"
+            )
     if thermal == "transient":
         if dvfs is None:
             dvfs = DvfsSpec()
@@ -1540,6 +1617,70 @@ def schedule(
         cand[c_star], freq, fx_stall, fx_bound,
     )
 
+    # --- tier-folded policy (opt-in) ----------------------------------
+    # One fixed array like `fixed`, but each layer picks its best tier
+    # fold on it. All three folds are priced through price_steps (the
+    # native fold reproduces the engine's cycles bit-for-bit), so the
+    # argmin can only improve on `fixed`; ties break toward native.
+    tier_fold_pol = None
+    fold_info = None
+    if "tier_fold" in policies:
+        spec_bw = bandwidth if bandwidth is not None else BandwidthSpec()
+        nat = native_fold(dataflow)
+        fold_order = [nat] + [f for f in FOLD_NAMES if f != nat]
+        Mw, Kw, Nw = (wl[:, i][:, None] for i in range(3))
+        r_c, c_c, l_c = (cand[:, i][None, :] for i in range(3))
+        priced = [
+            price_steps(dataflow, Mw, Kw, Nw, r_c, c_c, l_c, tech, spec_bw,
+                        fold=f)
+            for f in fold_order
+        ]
+        cyc_f = np.stack([p["total_cycles"] for p in priced])  # (3, W, n_cand)
+        if require_feasible:
+            ok_f = np.stack(
+                [p["sram_need_bytes"] <= spec_bw.sram_bytes for p in priced]
+            )
+            cyc_fm = np.where(feas[None] & ok_f, cyc_f, np.inf)
+        else:
+            cyc_fm = np.where(feas[None], cyc_f, np.inf)
+        fi = np.argmin(cyc_fm, axis=0)  # first minimum -> native on ties
+        cell = np.take_along_axis(cyc_fm, fi[None], axis=0)[0]
+        en_f = np.stack([p["energy_j"] for p in priced])
+        cell_en = np.where(
+            np.isfinite(cell),
+            np.take_along_axis(en_f, fi[None], axis=0)[0],
+            np.inf,
+        )
+        tot_f = np.sum(counts[:, None] * cell, axis=0)
+        c_fold = int(np.argmin(tot_f))
+        tf_cyc = cell[:, c_fold]
+        fin = np.isfinite(tf_cyc)
+        st_f = np.stack([p["stall_cycles"] for p in priced])
+        bi_f = np.stack([p["bound_idx"] for p in priced])
+        cell_st = np.take_along_axis(st_f, fi[None], axis=0)[0][:, c_fold]
+        cell_bi = np.take_along_axis(bi_f, fi[None], axis=0)[0][:, c_fold]
+        tf_stall = float(np.sum(counts * np.where(fin, cell_st, 0.0)))
+        weight = counts * np.where(fin, tf_cyc, 0.0)
+        b_names = bound_names(cell_bi)
+        shares = {n: float(np.sum(weight[b_names == n])) for n in BOUND_NAMES}
+        tf_bound = max(BOUND_NAMES, key=lambda n: shares[n])
+        tier_fold_pol = _reduce_policy(
+            "tier_fold", counts, tf_cyc, cell_en[:, c_fold],
+            np.where(fin, res2.t_max_c[:, c_fold], np.nan),
+            util(tf_cyc, np.full(W, c_fold)),
+            np.where(fin, res2.cycles_2d[:, c_fold], np.inf),
+            cand[c_fold], freq, tf_stall, tf_bound,
+        )
+        li = fi[:, c_fold]
+        wsum = float(weight.sum())
+        fold_info = {
+            "by_layer": [fold_order[int(i)] for i in li],
+            "residency": {
+                f: (float(np.sum(weight[li == i])) / wsum if wsum > 0 else 0.0)
+                for i, f in enumerate(fold_order)
+            },
+        }
+
     dvfs_report = None
     if thermal == "transient":
         dvfs_report = _governed_layer_replay(
@@ -1559,6 +1700,8 @@ def schedule(
         n_thermally_masked=n_thermal_masked,
         thermal_limit=thermal_limit,
         dvfs=dvfs_report,
+        tier_fold=tier_fold_pol,
+        fold=fold_info,
     )
 
 

@@ -77,6 +77,9 @@ class WorkloadStream:
     ``workloads`` / ``counts`` are the arrays ``core.engine.schedule``
     consumes; ``gemms`` keeps the named per-entry breakdown for
     reports. Entries are unique (M, K, N) shapes (merged on lowering).
+    ``layer_names`` aligns with ``workloads`` rows — reports that
+    attach per-layer decisions (e.g. the schedule's ``tier_fold``
+    fold-per-layer assignment) key on it.
     """
 
     arch: str
@@ -93,6 +96,11 @@ class WorkloadStream:
     def counts(self) -> np.ndarray:
         """(n,) int64 multiplicity per unique GEMM."""
         return np.array([g.count for g in self.gemms], dtype=np.int64)
+
+    @property
+    def layer_names(self) -> tuple[str, ...]:
+        """Per-entry names, aligned with ``workloads`` / ``counts``."""
+        return tuple(g.name for g in self.gemms)
 
     @property
     def total_macs(self) -> int:

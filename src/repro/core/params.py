@@ -18,10 +18,13 @@ import numpy as np
 __all__ = [
     "VALID_BACKENDS",
     "VALID_DATAFLOWS",
+    "VALID_FOLDS",
     "VALID_LENGTH_DISTS",
     "VALID_METRICS",
     "VALID_MODES",
     "VALID_OBJECTIVES",
+    "VALID_SCHEDULE_POLICIES",
+    "VALID_SERVE_MAPPINGS",
     "VALID_SERVE_POLICIES",
     "VALID_TECHS",
     "VALID_THERMAL_MODES",
@@ -44,6 +47,20 @@ VALID_MODES = ("opt", "square")
 #: steady state at a fixed clock; 'transient' time-steps the same RC
 #: stack under a DVFS governor and gates on the governed excursion.
 VALID_THERMAL_MODES = ("steady", "transient")
+#: per-layer tier folds: which GEMM dimension a stack of L tiers
+#: partitions. Every dataflow has a *native* fold (its paper tier
+#: split: 'k' for os/dos, 'm' for ws, 'n' for is) plus two non-native
+#: folds priced by ``bandwidth.fold_traffic_batched``.
+VALID_FOLDS = ("m", "k", "n")
+#: scheduling policies of ``engine.schedule``: 'per_layer' re-shapes
+#: the array per layer, 'fixed' commits one array for the stream,
+#: 'tier_fold' commits one array but picks the best per-layer tier
+#: fold (m/k/n) on it.
+VALID_SCHEDULE_POLICIES = ("per_layer", "fixed", "tier_fold")
+#: serving step-mapping: 'native' prices each step under the
+#: dataflow's paper tier split; 'tier_fold' prices all folds and takes
+#: the per-step elementwise best.
+VALID_SERVE_MAPPINGS = ("native", "tier_fold")
 #: serving batch policies (``core.serve.TrafficSpec``): 'continuous'
 #: admits into free slots every step, 'static' drains each batch fully
 #: before admitting the next.

@@ -28,7 +28,7 @@ import dataclasses
 
 import numpy as np
 
-from ..analytical import _ceil_div
+from ..analytical import _ceil_div, native_fold
 from ..dataflow import activity_batched
 from . import constants as C
 
@@ -44,7 +44,8 @@ class PowerReport:
     runtime_cycles: float
 
 
-def array_power_batched(M, K, N, rows, cols, tiers, tech, dataflow: str = "dos"):
+def array_power_batched(M, K, N, rows, cols, tiers, tech, dataflow: str = "dos",
+                        fold: str | None = None):
     """Batched power model: all arguments broadcast; ``tech`` is a str or
     array of '2d'|'tsv'|'miv'. Returns a dict of float64 arrays:
 
@@ -56,12 +57,18 @@ def array_power_batched(M, K, N, rows, cols, tiers, tech, dataflow: str = "dos")
     — the 2D array's hidden cost when R, C exceed the active M, N tile.
     WS/IS (no cross-tier traffic) are charged the operand-delivery hops
     from their activity model instead.
+
+    ``fold`` (a non-native tier fold, see ``analytical.fold_dims``)
+    reprices cycles and vertical activity through the folded activity
+    model; non-native folds charge the generic operand-delivery hop
+    model in-plane. ``None``/native is the existing model bit-for-bit.
     """
     M, K, N, R, Cc, L = np.broadcast_arrays(
         *(np.asarray(x, dtype=np.int64) for x in (M, K, N, rows, cols, tiers))
     )
+    native = fold is None or fold == native_fold(dataflow)
     tech = np.broadcast_to(np.asarray(tech), M.shape)
-    act = activity_batched(M, K, N, R, Cc, L, dataflow)
+    act = activity_batched(M, K, N, R, Cc, L, dataflow, fold=None if native else fold)
     n_per_tier = R * Cc
     n_total = n_per_tier * L
     t_s = act.cycles / C.FREQ_HZ
@@ -76,7 +83,7 @@ def array_power_batched(M, K, N, rows, cols, tiers, tech, dataflow: str = "dos")
     p_mac = act.mac_ops_total * C.E_MAC_OP_J / t_s
 
     # In-plane streaming.
-    if dataflow in ("os", "dos"):
+    if dataflow in ("os", "dos") and native:
         kl = _ceil_div(K, L)
         folds = _ceil_div(M, R) * _ceil_div(N, Cc)
         a_hops = np.minimum(M, R) * kl * Cc * folds * L

@@ -35,8 +35,8 @@ import dataclasses
 
 import numpy as np
 
-from .analytical import dataflow_dims
-from .bandwidth import BandwidthSpec, gemm_traffic_batched, roofline_cycles
+from .analytical import fold_dims
+from .bandwidth import BandwidthSpec, fold_traffic_batched, roofline_cycles
 from .ppa import constants as C
 from .ppa.power import array_power_batched
 from .ppa.thermal import ThermalState, step_temps
@@ -112,6 +112,7 @@ def price_steps(
     bandwidth: BandwidthSpec,
     freq_hz=C.FREQ_HZ,
     vdd_v=C.VDD,
+    fold: str | None = None,
 ) -> dict:
     """Price one batch of GEMM steps on fixed arrays, in one call.
 
@@ -119,8 +120,13 @@ def price_steps(
     and ``core.serve``'s queue stepping: dataflow fold geometry ->
     roofline'd cycles -> scaled power -> seconds / energy / per-tier
     watts. All array arguments broadcast together (the serve pricer
-    passes (layers, points) matrices); ``dataflow``/``bandwidth`` and
-    the operating point are uniform per call.
+    passes (layers, points) matrices); ``dataflow``/``bandwidth``/
+    ``fold`` and the operating point are uniform per call.
+
+    ``fold`` selects a per-layer tier fold (``analytical.fold_dims``)
+    for the ``tier_fold`` policy and the serve mapping knob; ``None``
+    (or the dataflow's native fold) is the paper's tier split and
+    reproduces the pre-fold pricing bit-for-bit.
 
     Returns a dict of broadcast arrays:
       ``compute_cycles``  array-busy cycles (clock-invariant count)
@@ -133,17 +139,17 @@ def price_steps(
       ``seconds``         total_cycles / freq_hz
       ``energy_j``        active power over compute + static over stall
     """
-    D1, D2, T = dataflow_dims(dataflow, M, K, N, tiers)
+    D1, D2, T = fold_dims(fold, dataflow, M, K, N, tiers)
     folds = -(-D1 // rows) * -(-D2 // cols)
     compute = (2 * rows + cols + T - 2).astype(np.float64) * folds
-    tr = gemm_traffic_batched(
-        dataflow, M, K, N, rows, cols, tiers, tech, bandwidth
+    tr = fold_traffic_batched(
+        fold, dataflow, M, K, N, rows, cols, tiers, tech, bandwidth
     )
     bpc = dram_bytes_per_cycle(bandwidth, freq_hz)
     with np.errstate(invalid="ignore"):
         mem = tr["dram_bytes"] / bpc
     total, stall, bidx = roofline_cycles(compute, mem, tr["vlink_cycles"])
-    pw = array_power_batched(M, K, N, rows, cols, tiers, tech, dataflow)
+    pw = array_power_batched(M, K, N, rows, cols, tiers, tech, dataflow, fold=fold)
     pw = scale_power(pw, freq_hz, vdd_v)
     with np.errstate(invalid="ignore", divide="ignore"):
         seconds = total / freq_hz

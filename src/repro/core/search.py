@@ -49,7 +49,7 @@ import numpy as np
 
 from .cache import ResultCache
 from .engine import DesignGrid, evaluate, pareto_mask_batched
-from .params import VALID_OBJECTIVES, validate_option
+from .params import VALID_FOLDS, VALID_OBJECTIVES, validate_option
 
 __all__ = [
     "SearchSpec",
@@ -82,6 +82,10 @@ class SearchSpec:
     - ``dram_gbs`` / ``sram_kib``: optional memory-system axes [GB/s,
       KiB per tier]; they require ``AnalysisSpec.bandwidth`` and ride
       the grid's per-point overrides.
+    - ``folds``: optional tier-fold axis ('m'|'k'|'n' — see
+      ``analytical.fold_dims``); each candidate commits every layer to
+      one fold, riding the grid's per-point ``fold`` override. A
+      dataflow's native fold prices identically to no fold at all.
     - ``ref_point``: hypervolume reference (one value per objective);
       ``None`` derives it from the evaluated feasible set (nadir * 1.1).
     """
@@ -95,6 +99,7 @@ class SearchSpec:
     seed: int = 0
     dram_gbs: tuple[float, ...] | None = None
     sram_kib: tuple[float, ...] | None = None
+    folds: tuple[str, ...] | None = None
     ref_point: tuple[float, ...] | None = None
 
     def __post_init__(self):
@@ -131,6 +136,11 @@ class SearchSpec:
             if not vals or any(not math.isfinite(x) or x <= 0 for x in vals):
                 raise ValueError(f"{name} axis needs positive finite values, got {v}")
             object.__setattr__(self, name, vals)
+        if self.folds is not None:
+            object.__setattr__(
+                self, "folds",
+                tuple(validate_option("fold", f, VALID_FOLDS) for f in self.folds),
+            )
         if self.ref_point is not None:
             rp = tuple(float(x) for x in self.ref_point)
             if len(rp) != len(self.objectives) or any(not math.isfinite(x) for x in rp):
@@ -189,6 +199,8 @@ def resolve_axes(study) -> list[_Axis]:
         v = getattr(spec, name)
         if v is not None:
             axes.append(_Axis(name, np.asarray(v, dtype=np.float64)))
+    if spec.folds is not None:
+        axes.append(_Axis("fold", np.asarray(list(spec.folds))))
     for ax in axes:
         if len(np.unique(ax.values)) != ax.values.shape[0]:
             raise ValueError(
@@ -209,7 +221,7 @@ def _candidate_grid(study, stream, axes: list[_Axis], cands: np.ndarray) -> Desi
         "tech": vals["tech"],
         "mode": study.space.mode,
     }
-    for name in ("dram_gbs", "sram_kib"):
+    for name in ("dram_gbs", "sram_kib", "fold"):
         if name in vals:
             kw[name] = vals[name]
     return DesignGrid(**kw)

@@ -69,10 +69,16 @@ import math
 
 import numpy as np
 
+from .analytical import FOLD_NAMES, native_fold
 from .bandwidth import BandwidthSpec
 from .cache import ResultCache
 from .engine import DesignGrid, candidate_fixed_designs, evaluate
-from .params import VALID_LENGTH_DISTS, VALID_SERVE_POLICIES, validate_option
+from .params import (
+    VALID_LENGTH_DISTS,
+    VALID_SERVE_MAPPINGS,
+    VALID_SERVE_POLICIES,
+    validate_option,
+)
 from .ppa import constants as C
 from .ppa.power import array_power_batched
 from .ppa.thermal import ThermalState, step_temps
@@ -197,12 +203,20 @@ class ServeSpec:
       ``max_batch + chunk_prefill`` — the steady-state mixed step).
     - ``max_steps``: safety cap on simulation steps (default: derived
       from the trace; a bound no admissible schedule exceeds).
+    - ``mapping``: ``'native'`` (default — each step priced at the
+      dataflow's native tier mapping, bit-identical to studies written
+      before the knob) or ``'tier_fold'`` — every step additionally
+      prices the non-native tier folds (``analytical.fold_dims``) and
+      takes, per layer and design point, the cheapest SRAM-feasible
+      fold by total cycles, so serving rides the fine-grain tier-folded
+      mapping exactly like ``engine.schedule``'s tier_fold policy.
     """
 
     traffic: TrafficSpec | dict = dataclasses.field(default_factory=TrafficSpec)
     bytes_kv: int = 2
     design_tokens: int | None = None
     max_steps: int | None = None
+    mapping: str = "native"
 
     def __post_init__(self):
         if isinstance(self.traffic, dict):
@@ -223,6 +237,7 @@ class ServeSpec:
                 if v < 1:
                     raise ValueError(f"{name} must be >= 1, got {v}")
                 object.__setattr__(self, name, v)
+        validate_option("serve mapping", self.mapping, VALID_SERVE_MAPPINGS)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -379,9 +394,15 @@ class _StepPricer:
     ``max(compute, memory, vlink)`` per layer (Eqs. 1/2 +
     ``bandwidth.roofline_cycles``), count-weighted over the stream,
     plus the serialized kv-cache service time.
+
+    ``mapping='tier_fold'`` additionally prices every non-native tier
+    fold per step and keeps, per (layer, point), the cheapest
+    SRAM-feasible fold by total cycles (ties keep the native mapping,
+    so tier_fold is never slower than native).
     """
 
-    def __init__(self, designs: dict, K, N, counts, bandwidth: BandwidthSpec):
+    def __init__(self, designs: dict, K, N, counts, bandwidth: BandwidthSpec,
+                 mapping: str = "native"):
         self.rows = designs["rows"]
         self.cols = designs["cols"]
         self.tiers = designs["tiers"]
@@ -391,6 +412,7 @@ class _StepPricer:
         self.N = np.asarray(N, dtype=np.int64)
         self.counts = np.asarray(counts, dtype=np.float64)
         self.bw = bandwidth
+        self.mapping = mapping
         df = designs["dataflow"]
         self.groups = {
             str(d): np.nonzero(df == d)[0] for d in np.unique(df).tolist()
@@ -402,6 +424,27 @@ class _StepPricer:
                 self.tech[idx], d,
             )
             self.static_w[idx] = pw["static_w"]
+
+    def _price_group(self, d, m, Kc, Nc, R, Cc, L, tech, f, v):
+        """One dataflow group's per-(layer, point) step pricing; under
+        ``mapping='tier_fold'`` the elementwise cheapest SRAM-feasible
+        fold (by total cycles, native winning ties) is returned."""
+        pr = price_steps(d, m, Kc, Nc, R, Cc, L, tech, self.bw, f, v)
+        if self.mapping != "tier_fold":
+            return pr
+        keys = ("total_cycles", "compute_cycles", "stall_cycles",
+                "total_w", "dram_bytes")
+        best = {k: pr[k] for k in keys}
+        for fold in FOLD_NAMES:
+            if fold == native_fold(d):
+                continue
+            p = price_steps(d, m, Kc, Nc, R, Cc, L, tech, self.bw, f, v,
+                            fold=fold)
+            better = (p["total_cycles"] < best["total_cycles"]) & (
+                p["sram_need_bytes"] <= self.bw.sram_bytes
+            )
+            best = {k: np.where(better, p[k], best[k]) for k in keys}
+        return best
 
     def price(self, m_tokens: np.ndarray, kv_bytes: np.ndarray,
               freq_hz=C.FREQ_HZ, vdd_v=C.VDD):
@@ -426,12 +469,12 @@ class _StepPricer:
             Kc, Nc = self.K[:, None], self.N[:, None]
             f = freq_hz if f_scalar else freq_hz[idx]
             v = vdd_v if v_scalar else vdd_v[idx]
-            pr = price_steps(
+            pr = self._price_group(
                 d, m[None, :], Kc, Nc, R[None, :], Cc[None, :], L[None, :],
                 np.broadcast_to(
                     self.tech[idx][None, :], (self.K.size, idx.size)
                 ),
-                self.bw, f, v,
+                f, v,
             )
             compute = pr["compute_cycles"]
             w_total = np.sum(cw * pr["total_cycles"], axis=0)
@@ -494,7 +537,8 @@ def _simulate(designs: dict, K, N, counts, trace: dict, spec: ServeSpec,
     )
 
     tr = spec.traffic
-    pricer = _StepPricer(designs, K, N, counts, bandwidth)
+    pricer = _StepPricer(designs, K, N, counts, bandwidth,
+                         mapping=spec.mapping)
     P, n = designs["rows"].size, tr.n_requests
     arrival = trace["arrival_s"] * C.FREQ_HZ  # cycles
     prompt = trace["prompt_lens"]

@@ -62,6 +62,7 @@ from .params import (
     VALID_METRICS,
     VALID_MODES,
     VALID_OBJECTIVES,
+    VALID_SCHEDULE_POLICIES,
     VALID_TECHS,
     VALID_THERMAL_MODES,
     validate_option,
@@ -452,6 +453,13 @@ class AnalysisSpec:
     serve's queue stepping is governed end-to-end (tokens/s *is*
     sustained). ``dvfs`` without ``thermal='transient'`` is an error.
 
+    ``policies`` (schedule studies only) selects which scheduling
+    policies ``engine.schedule`` reports. ``None`` (default) keeps the
+    engine default — ``('per_layer', 'fixed')``, bit-identical to
+    studies written before the knob existed; add ``'tier_fold'`` to
+    also price the fine-grain tier-folded mapping (each layer's GEMM
+    partitioned across tiers along its best dimension, vlink-priced).
+
     ``chunk=None`` uses the engine default, except for network
     workloads where the adaptive bound kicks in (token-sized M dims).
     ``shard`` is the engine's device-sharding knob (``'auto'`` = split
@@ -473,6 +481,7 @@ class AnalysisSpec:
     serve: ServeSpec | dict | None = None
     thermal: str = "steady"
     dvfs: DvfsSpec | dict | None = None
+    policies: tuple[str, ...] | None = None
     workers: int | None = None
     params: dict = dataclasses.field(default_factory=dict)
 
@@ -551,6 +560,22 @@ class AnalysisSpec:
                 "dvfs= needs thermal='transient' (the governor only runs "
                 "in the transient model)"
             )
+        if self.policies is not None:
+            if self.kind != "schedule":
+                raise ValueError(
+                    "policies= applies to schedule studies only "
+                    f"(got kind={self.kind!r})"
+                )
+            pols = tuple(
+                validate_option("policy", p, VALID_SCHEDULE_POLICIES)
+                for p in self.policies
+            )
+            if "per_layer" not in pols or "fixed" not in pols:
+                raise ValueError(
+                    "policies must include 'per_layer' and 'fixed' (the "
+                    "baselines every schedule report is anchored on)"
+                )
+            object.__setattr__(self, "policies", pols)
         if self.workers is not None:
             n = int(self.workers)
             if n < 1:
@@ -884,6 +909,8 @@ class Study:
         kw = {}
         if self.analysis.chunk is not None:
             kw["chunk"] = self.analysis.chunk
+        if self.analysis.policies is not None:
+            kw["policies"] = self.analysis.policies
         rep = schedule(
             stream,
             mac_budgets=self.space.mac_budgets,
@@ -1307,11 +1334,19 @@ class StudyResult:
             rep = self.report
             fx = rep.fixed
             d = np.asarray(fx.design).reshape(-1)
-            return (
+            line = (
                 f"{name}: schedule {rep.arch}/{rep.shape} — fixed "
                 f"{int(d[0])}x{int(d[1])}x{int(d[2])} at {fx.total_cycles:.3e} "
                 f"cycles, {fx.speedup_vs_2d:.2f}x vs 2D"
             )
+            tf = getattr(rep, "tier_fold", None)
+            if tf is not None:
+                gain = fx.total_cycles / tf.total_cycles if tf.total_cycles else 1.0
+                line += (
+                    f"; tier_fold {tf.total_cycles:.3e} cycles "
+                    f"({gain:.2f}x vs fixed)"
+                )
+            return line
         if self.kind == "advise":
             names = np.asarray(self.payload["names"])
             u, c = np.unique(names, return_counts=True)

@@ -1,0 +1,421 @@
+"""Scalar fold-pricing oracle: slow, explicit, obviously correct.
+
+The vectorized fold pricing path (``analytical.fold_dims`` ->
+``bandwidth.fold_traffic_batched`` -> ``pricing.price_steps``) is a
+pile of broadcast ``np.where`` algebra — fast, but hard to eyeball.
+This module reprices ONE (dataflow, fold, workload, design) point at a
+time with nothing but Python integers, explicit per-tier / per-fold /
+per-boundary loops, and if/else per model rule, so every charged byte
+and cycle can be traced back to the sentence in the model docstrings
+that mandates it. ``tests/test_fold.py`` runs the two implementations
+over a dense grid and asserts **bit-for-bit** float equality.
+
+Bit-for-bit is achievable because the vectorized model is exact-integer
+float64 arithmetic (all counts < 2^53) plus a small number of true
+float divisions; the oracle accumulates every count as an arbitrary-
+precision Python int (loops, not closed forms) and then applies the
+same final float ops in the same association order (one rounding per
+division — e.g. ``vlink_cycles = bytes / per_boundary_bw`` — matches
+exactly when both sides feed it identical operand bits).
+
+Everything here is deliberately O(folds * tiers): correctness over
+speed. Keep test workloads modest.
+"""
+
+import math
+
+from repro.core.bandwidth import TSV_VLINK_SHARE, BandwidthSpec
+from repro.core.ppa import constants as C
+
+
+def ceil_div(a: int, b: int) -> int:
+    """ceil(a/b) by counting how many size-b chunks cover a."""
+    assert a >= 0 and b >= 1
+    n = 0
+    while n * b < a:
+        n += 1
+    return n
+
+
+def count_folds(D1: int, D2: int, R: int, Cc: int) -> int:
+    """Number of (R x C) array passes over a (D1 x D2) spatial map,
+    counted by literally walking the tile grid."""
+    folds = 0
+    for _i in range(0, D1, R):
+        for _j in range(0, D2, Cc):
+            folds += 1
+    return folds
+
+
+def native_fold(dataflow: str) -> str:
+    if dataflow in ("os", "dos"):
+        return "k"
+    if dataflow == "ws":
+        return "m"
+    if dataflow == "is":
+        return "n"
+    raise ValueError(dataflow)
+
+
+def fold_geometry(dataflow: str, fold, M: int, K: int, N: int, L: int):
+    """(D1, D2, T_serial) of the dataflow under the chosen fold.
+
+    Spelled out case by case (no shared helper with the production
+    code): each tier runs the dataflow's own 2D schedule on its slice;
+    splitting the contraction dim pays L - 1 serial cross-tier adds.
+    """
+    if fold is None:
+        fold = native_fold(dataflow)
+    if dataflow in ("os", "dos"):
+        if fold == "k":  # native: K split across tiers + serial adds
+            return M, N, ceil_div(K, L) + L - 1
+        if fold == "m":  # rows split: independent sub-GEMMs, full K
+            return ceil_div(M, L), N, K
+        if fold == "n":
+            return M, ceil_div(N, L), K
+    elif dataflow == "ws":
+        if fold == "m":  # native: temporal M split, no vlink traffic
+            return N, K, ceil_div(M, L)
+        if fold == "k":  # contraction split: dOS-style serial adds
+            return N, ceil_div(K, L), M + L - 1
+        if fold == "n":
+            return ceil_div(N, L), K, M
+    elif dataflow == "is":
+        if fold == "n":  # native: temporal N split
+            return M, K, ceil_div(N, L)
+        if fold == "k":
+            return M, ceil_div(K, L), N + L - 1
+        if fold == "m":
+            return ceil_div(M, L), K, N
+    raise ValueError(f"unknown fold {fold!r} for dataflow {dataflow!r}")
+
+
+def per_tier_macs(dataflow: str, fold, M: int, K: int, N: int, L: int):
+    """Useful multiply-accumulates each tier performs, from its actual
+    (unpadded) slice of the split dimension. Conservation — the sum is
+    exactly M*K*N for EVERY fold — is a property test's assertion."""
+    if fold is None:
+        fold = native_fold(dataflow)
+    dim = {"m": M, "k": K, "n": N}[fold]
+    chunk = ceil_div(dim, L)
+    out = []
+    for tier in range(L):
+        lo = tier * chunk
+        hi = min(lo + chunk, dim)
+        span = max(0, hi - lo)
+        if fold == "m":
+            out.append(span * K * N)
+        elif fold == "k":
+            out.append(M * span * N)
+        else:
+            out.append(M * K * span)
+    return out
+
+
+def resolve_vbits(spec: BandwidthSpec, tech: str) -> float:
+    """Per-pile vertical bus width [bits/cycle]; '2d' has no links."""
+    if tech == "2d":
+        return math.inf
+    if spec.vlink_bits_per_mac == "derived":
+        if tech == "miv":
+            return float(C.VLINK_BITS)
+        return C.VLINK_BITS / TSV_VLINK_SHARE  # shared TSV bus
+    return float(spec.vlink_bits_per_mac)
+
+
+def _plane_vlink(folds: int, R: int, Cc: int, L: int, ba: int, vbits: float):
+    """Partial-sum accumulation down the pile (dOS-style contraction
+    split): every fold pushes one R x C accumulator plane across each
+    of the L - 1 tier boundaries. Boundaries run concurrently, so the
+    service time is ONE boundary's bytes over one boundary's bandwidth.
+    """
+    if L <= 1:
+        return 0.0, 0.0
+    total_bytes = 0
+    per_boundary_bytes = 0
+    for _fold in range(folds):
+        for boundary in range(L - 1):
+            plane = R * Cc * ba  # one accumulator plane
+            total_bytes += plane
+            if boundary == 0:  # any one boundary; all carry the same
+                per_boundary_bytes += plane
+    per_boundary_bw = float(R * Cc) * vbits / 8.0
+    return float(total_bytes), float(per_boundary_bytes) / per_boundary_bw
+
+
+def _stream_vlink(stream_bytes: int, R: int, Cc: int, L: int, vbits: float):
+    """Multicast of a shared operand's DRAM stream down the pile
+    (output-dim fold): each of the L - 1 boundaries carries one copy
+    of the stream; service time is the stream over one boundary."""
+    if L <= 1:
+        return 0.0, 0.0
+    total_bytes = 0
+    for _boundary in range(L - 1):
+        total_bytes += stream_bytes
+    per_boundary_bw = float(R * Cc) * vbits / 8.0
+    return float(total_bytes), float(stream_bytes) / per_boundary_bw
+
+
+def _repeat_bytes(times: int, tensor_bytes: int) -> int:
+    """Stream a tensor ``times`` times — charged read by read."""
+    total = 0
+    for _pass in range(times):
+        total += tensor_bytes
+    return total
+
+
+def oracle_traffic(dataflow: str, fold, M, K, N, R, Cc, L, tech: str,
+                   spec: BandwidthSpec) -> dict:
+    """DRAM bytes, vlink bytes/cycles and SRAM working set of one GEMM
+    under one fold — every branch of ``fold_traffic_batched`` (and the
+    native ``gemm_traffic_batched``) re-derived with explicit loops."""
+    if fold is None:
+        fold = native_fold(dataflow)
+    bi, ba = spec.bytes_in, spec.bytes_acc
+    sram = spec.sram_bytes  # float; may be inf
+    vbits = resolve_vbits(spec, tech)
+
+    if dataflow in ("os", "dos"):
+        # outputs stationary: accumulators + edge stream buffers resident
+        base = R * Cc * ba + 2 * (R + Cc) * bi
+        if fold == "k":  # native tier split: per-tier K slice
+            Kt = ceil_div(K, L)
+            foldM = ceil_div(M, R)
+            foldN = ceil_div(N, Cc)
+            a_tile = R * Kt * bi  # one fold-row's per-tier A slice
+            b_slice = Kt * N * bi  # full per-tier B slice
+            reuse_a = float(base + a_tile) <= sram
+            reuse_b = reuse_a and float(base + a_tile + b_slice) <= sram
+            a_bytes = _repeat_bytes(1 if reuse_a else foldN, M * K * bi)
+            b_bytes = _repeat_bytes(1 if reuse_b else foldM, K * N * bi)
+            o_bytes = M * N * ba  # written once; accumulation on-chip
+            folds = count_folds(M, N, R, Cc)
+            v_bytes, v_cycles = _plane_vlink(folds, R, Cc, L, ba, vbits)
+            dram = a_bytes + b_bytes + o_bytes
+        else:
+            a_tile = R * K * bi  # the fold keeps K whole
+            if fold == "m":
+                Mt = ceil_div(M, L)
+                foldMt = ceil_div(Mt, R)  # per-tier row folds (shrunk ~L)
+                foldN = ceil_div(N, Cc)
+                b_slice = K * N * bi  # B shared whole across tiers
+                reuse_a = float(base + a_tile) <= sram
+                reuse_b = reuse_a and float(base + a_tile + b_slice) <= sram
+                a_bytes = _repeat_bytes(1 if reuse_a else foldN, M * K * bi)
+                b_stream = _repeat_bytes(1 if reuse_b else foldMt, K * N * bi)
+                o_bytes = M * N * ba
+                v_bytes, v_cycles = _stream_vlink(b_stream, R, Cc, L, vbits)
+                dram = a_bytes + b_stream + o_bytes
+            else:  # fold == "n"
+                Nt = ceil_div(N, L)
+                foldM = ceil_div(M, R)
+                foldNt = ceil_div(Nt, Cc)
+                b_slice = K * Nt * bi  # per-tier column slice of B
+                reuse_a = float(base + a_tile) <= sram
+                reuse_b = reuse_a and float(base + a_tile + b_slice) <= sram
+                a_stream = _repeat_bytes(1 if reuse_a else foldNt, M * K * bi)
+                b_bytes = _repeat_bytes(1 if reuse_b else foldM, K * N * bi)
+                o_bytes = M * N * ba
+                v_bytes, v_cycles = _stream_vlink(a_stream, R, Cc, L, vbits)
+                dram = a_stream + b_bytes + o_bytes
+        return dict(dram_bytes=float(dram), vlink_bytes=v_bytes,
+                    vlink_cycles=v_cycles, sram_need_bytes=float(base))
+
+    if dataflow in ("ws", "is"):
+        # ws: weights (K x N) stationary, A streams, O accumulates over
+        # the ceil(K/C) contraction folds. is: mirror with A <-> B.
+        base = R * Cc * bi + 2 * (R * ba + Cc * bi)
+        stationary = (K * N if dataflow == "ws" else M * K) * bi
+        # the streamed operand is A for ws, B for is; its tensor bytes:
+        moving = M * K * bi if dataflow == "ws" else K * N * bi
+        if fold == "k":  # contraction split: dOS-style planes
+            Kt = ceil_div(K, L)
+            foldKt = ceil_div(Kt, Cc)
+            if dataflow == "ws":
+                fold_sp = ceil_div(N, R)  # spatial folds over rows
+                resident = M * Kt * bi  # per-tier K slice of A
+                o_tile = M * R * ba
+            else:
+                fold_sp = ceil_div(M, R)
+                resident = N * Kt * bi
+                o_tile = N * R * ba
+            reuse = float(base + resident) <= sram
+            m_bytes = _repeat_bytes(1 if reuse else fold_sp, moving)
+            o_fits = float(base + (resident if reuse else 0) + o_tile) <= sram
+            o_passes = 1 if o_fits else 2 * foldKt - 1
+            o_bytes = _repeat_bytes(o_passes, M * N * ba)
+            folds = fold_sp * foldKt
+            v_bytes, v_cycles = _plane_vlink(folds, R, Cc, L, ba, vbits)
+        elif (dataflow == "ws" and fold == "n") or (
+                dataflow == "is" and fold == "m"):
+            # output-dim fold: tiers share the WHOLE moving operand
+            foldK = ceil_div(K, Cc)
+            if dataflow == "ws":
+                Nt = ceil_div(N, L)
+                fold_sp = ceil_div(Nt, R)  # per-tier spatial folds
+                resident = M * K * bi  # every tier consumes all of A
+                o_tile = M * R * ba
+            else:
+                Mt = ceil_div(M, L)
+                fold_sp = ceil_div(Mt, R)
+                resident = N * K * bi
+                o_tile = N * R * ba
+            reuse = float(base + resident) <= sram
+            m_stream = _repeat_bytes(1 if reuse else fold_sp, moving)
+            o_fits = float(base + (resident if reuse else 0) + o_tile) <= sram
+            o_passes = 1 if o_fits else 2 * foldK - 1
+            o_bytes = _repeat_bytes(o_passes, M * N * ba)
+            v_bytes, v_cycles = _stream_vlink(m_stream, R, Cc, L, vbits)
+            m_bytes = m_stream
+        else:  # native temporal split (ws fold-m / is fold-n)
+            foldK = ceil_div(K, Cc)
+            if dataflow == "ws":
+                Mt = ceil_div(M, L)
+                fold_sp = ceil_div(N, R)
+                resident = Mt * K * bi
+                o_tile = Mt * R * ba
+            else:
+                Nt = ceil_div(N, L)
+                fold_sp = ceil_div(M, R)
+                resident = Nt * K * bi
+                o_tile = Nt * R * ba
+            reuse = float(base + resident) <= sram
+            m_bytes = _repeat_bytes(1 if reuse else fold_sp, moving)
+            o_fits = float(base + (resident if reuse else 0) + o_tile) <= sram
+            o_passes = 1 if o_fits else 2 * foldK - 1
+            o_bytes = _repeat_bytes(o_passes, M * N * ba)
+            v_bytes, v_cycles = 0.0, 0.0
+        return dict(dram_bytes=float(stationary + m_bytes + o_bytes),
+                    vlink_bytes=v_bytes, vlink_cycles=v_cycles,
+                    sram_need_bytes=float(base))
+
+    raise ValueError(f"unknown dataflow {dataflow!r}")
+
+
+def oracle_activity(dataflow: str, fold, M, K, N, R, Cc, L):
+    """(cycles, mac_ops, h_hops, v_hops) of the power model's activity
+    accounting — native dataflows verbatim, non-native folds by the
+    fold convention (partial-sum planes vs shared-operand multicast)."""
+    nat = fold is None or fold == native_fold(dataflow)
+    if not nat:
+        D1, D2, T = fold_geometry(dataflow, fold, M, K, N, L)
+        folds = count_folds(D1, D2, R, Cc)
+        cycles = float((2 * R + Cc + T - 2) * folds)
+        if fold == "k":
+            v_hops = 0
+            for _fold in range(folds):
+                for _boundary in range(L - 1):
+                    v_hops += R * Cc  # one word plane per boundary
+            v_hops = float(v_hops) if L > 1 else 0.0
+        else:
+            shared_words = K * N if fold == "m" else M * K
+            v_hops = 0
+            for _boundary in range(L - 1):
+                v_hops += shared_words  # one multicast copy
+            v_hops = float(v_hops) if L > 1 else 0.0
+    elif dataflow in ("os", "dos"):
+        kl = ceil_div(K, L)
+        folds = count_folds(M, N, R, Cc)
+        cycles = float((2 * R + Cc + kl + L - 3) * folds)
+        v_hops = float(R * Cc * (L - 1) * folds) if L > 1 else 0.0
+    elif dataflow == "ws":
+        cycles = float(
+            (2 * R + Cc + ceil_div(M, L) - 2) * count_folds(N, K, R, Cc)
+        )
+        v_hops = 0.0
+    else:  # is
+        cycles = float(
+            (2 * R + Cc + ceil_div(N, L) - 2) * count_folds(M, K, R, Cc)
+        )
+        v_hops = 0.0
+    mac_ops = float(M * N * K)
+    return cycles, mac_ops, 2.0 * mac_ops, v_hops
+
+
+def oracle_power(dataflow: str, fold, M, K, N, R, Cc, L, tech: str) -> dict:
+    """Scalar re-derivation of ``array_power_batched`` at (1 GHz, VDD).
+
+    Op-for-op: each component repeats the vectorized association order
+    so the floats agree bit-for-bit.
+    """
+    nat = fold is None or fold == native_fold(dataflow)
+    cycles, mac_ops, h_hops, v_hops = oracle_activity(
+        dataflow, None if nat else fold, M, K, N, R, Cc, L
+    )
+    n_per_tier = R * Cc
+    n_total = n_per_tier * L
+    t_s = cycles / C.FREQ_HZ
+    side = math.sqrt(n_per_tier * C.A_MAC_UM2)
+    p_base = n_total * (C.P_CLK_LEAK_PER_MAC_W
+                        + C.P_WIRE_PER_MAC_PER_UM_W * side)
+    p_mac = mac_ops * C.E_MAC_OP_J / t_s
+    if dataflow in ("os", "dos") and nat:
+        # full-array systolic shift charge (shifting never stops early)
+        kl = ceil_div(K, L)
+        folds = count_folds(M, N, R, Cc)
+        a_hops = min(M, R) * kl * Cc * folds * L
+        b_hops = kl * min(N, Cc) * R * folds * L
+        p_hop = (a_hops + b_hops) * C.E_HOP_J / t_s
+    else:
+        p_hop = h_hops * C.E_HOP_J / t_s
+    cap = C.C_TSV_F if tech == "tsv" else C.C_MIV_F
+    e_bit = 0.5 * cap * C.VDD**2
+    n_vbits = n_per_tier * (L - 1) * C.VLINK_BITS
+    if L > 1 and tech != "2d" and v_hops > 0:
+        p_v = C.ALPHA_V * n_vbits * C.FREQ_HZ * e_bit
+    else:
+        p_v = 0.0
+    total = p_base + p_mac + p_hop + p_v
+    peak = total + n_total * C.E_MAC_PEAK_J * C.FREQ_HZ
+    return dict(total_w=total, peak_w=peak, static_w=p_base,
+                dynamic_w=p_mac + p_hop + p_v, cycles=cycles)
+
+
+def oracle_price(dataflow: str, M, K, N, R, Cc, L, tech: str,
+                 spec: BandwidthSpec, freq_hz=C.FREQ_HZ, vdd_v=C.VDD,
+                 fold=None) -> dict:
+    """Scalar twin of ``pricing.price_steps`` for one design point."""
+    M, K, N, R, Cc, L = (int(x) for x in (M, K, N, R, Cc, L))
+    D1, D2, T = fold_geometry(dataflow, fold, M, K, N, L)
+    folds = count_folds(D1, D2, R, Cc)
+    compute = float(2 * R + Cc + T - 2) * float(folds)
+    tr = oracle_traffic(dataflow, fold, M, K, N, R, Cc, L, tech, spec)
+    bpc = spec.dram_gbs * 1e9 / freq_hz
+    mem = tr["dram_bytes"] / bpc
+    total = max(compute, mem, tr["vlink_cycles"])
+    stall = total - compute
+    if tr["vlink_cycles"] > max(compute, mem):
+        bidx = 2
+    elif mem > compute:
+        bidx = 1
+    else:
+        bidx = 0
+    pw = oracle_power(dataflow, fold, M, K, N, R, Cc, L, tech)
+    if not (freq_hz == C.FREQ_HZ and vdd_v == C.VDD):
+        sd = (freq_hz / C.FREQ_HZ) * (vdd_v / C.VDD) ** 2
+        ss = (vdd_v / C.VDD) ** 2
+        static = pw["static_w"] * ss
+        dynamic = pw["dynamic_w"] * sd
+        total_w = static + dynamic
+        peak_w = total_w + (pw["peak_w"] - pw["total_w"]) * sd
+        pw = dict(pw, static_w=static, dynamic_w=dynamic,
+                  total_w=total_w, peak_w=peak_w)
+    energy = (pw["total_w"] * compute + pw["static_w"] * stall) / freq_hz
+    return {
+        "compute_cycles": compute,
+        "mem_cycles": mem,
+        "vlink_cycles": tr["vlink_cycles"],
+        "total_cycles": total,
+        "stall_cycles": stall,
+        "bound_idx": bidx,
+        "dram_bytes": tr["dram_bytes"],
+        "vlink_bytes": tr["vlink_bytes"],
+        "sram_need_bytes": tr["sram_need_bytes"],
+        "total_w": pw["total_w"],
+        "static_w": pw["static_w"],
+        "dynamic_w": pw["dynamic_w"],
+        "peak_w": pw["peak_w"],
+        "tier_w": pw["total_w"] / L,
+        "seconds": total / freq_hz,
+        "energy_j": energy,
+    }

@@ -396,3 +396,43 @@ def test_roofline_cycles_combiner():
     np.testing.assert_array_equal(total, [100.0, 200.0, 300.0])
     np.testing.assert_array_equal(stall, [0.0, 100.0, 200.0])
     assert [BOUND_NAMES[i] for i in idx] == ["compute", "memory", "vlink"]
+
+
+def test_vlink_tech_flips_the_best_fold():
+    """Pinned TSV-vs-MIV fold flip (ISSUE 10, satellite 2).
+
+    (M, K, N) = (12, 7000, 12) on an os 4x4 array folded across 3
+    tiers under the paper-default memory system. Folding the output
+    rows (fold-m) trims compute from 21114 to 21030 cycles but emits
+    two partial-sum planes per fold. MIV vlinks (17 bits/MAC) drain
+    them for free -> fold-m wins; the shared TSV bus (17/16 bits/MAC)
+    turns the identical mapping vlink-bound at ~39529 cycles -> the
+    native fold-K keeps the win. Same silicon, same workload: the
+    bonding technology alone decides the best intra-layer mapping.
+    """
+    from repro.core.pricing import price_steps
+
+    spec = BandwidthSpec.paper_default()
+    args = ("os", np.array([12]), np.array([7000]), np.array([12]),
+            np.array([4]), np.array([4]), np.array([3]))
+
+    def cycles(tech, fold):
+        pr = price_steps(*args, np.array([tech]), spec, fold=fold)
+        return float(pr["total_cycles"][0]), int(pr["bound_idx"][0])
+
+    tsv_native, tsv_nb = cycles("tsv", None)
+    tsv_m, tsv_mb = cycles("tsv", "m")
+    miv_native, _ = cycles("miv", None)
+    miv_m, miv_mb = cycles("miv", "m")
+
+    # pinned absolute cycle counts (bit-exact regression values)
+    assert tsv_native == 21114.0 and miv_native == 21114.0
+    assert miv_m == 21030.0
+    assert tsv_m == pytest.approx(39529.41176470588)
+    # the flip itself: strict winners on both technologies
+    assert miv_m < miv_native, "MIV must prefer fold-m"
+    assert tsv_m > tsv_native, "TSV must keep the native fold-K"
+    # and the mechanism: fold-m is vlink-bound on TSV, compute-bound on MIV
+    assert tsv_mb == BOUND_NAMES.index("vlink")
+    assert miv_mb == BOUND_NAMES.index("compute")
+    assert tsv_nb == BOUND_NAMES.index("compute")

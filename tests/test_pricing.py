@@ -1,0 +1,124 @@
+"""Off-nominal ``pricing.price_steps`` coverage (ISSUE 10, satellite 3).
+
+The 1 GHz / nominal-VDD identity path has long been regression-pinned
+(roofline + serve suites). These tests pin the operating points those
+suites never leave:
+
+- the **lowest DVFS state** (first entry of ``DvfsSpec``): compute and
+  vlink cycles are frequency-invariant, memory cycles scale with f
+  (fewer wall-clock bytes/cycle at speed, more when slowed), power
+  splits into the static (v/V0)^2 and dynamic (f/F0)(v/V0)^2 scalings;
+- the **zero-M degenerate step**: a step that does no useful work
+  still prices its compulsory weight traffic, and the power keys are
+  NaN (0 compute seconds — there is no meaningful watts figure for a
+  workless step; serve never emits one);
+- a **vlink-bound step**: the vertical links, not compute or DRAM,
+  set the critical path — total == vlink cycles, bound_idx == 2.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.bandwidth import BOUND_NAMES, BandwidthSpec
+from repro.core.ppa import constants as C
+from repro.core.pricing import DvfsSpec, price_steps
+
+
+def _price(dataflow, M, K, N, R, Cc, L, tech, spec, *args, **kw):
+    pr = price_steps(dataflow, np.array([M]), np.array([K]), np.array([N]),
+                     np.array([R]), np.array([Cc]), np.array([L]),
+                     np.array([tech]), spec, *args, **kw)
+    return {k: float(np.asarray(v).reshape(-1)[0]) for k, v in pr.items()}
+
+
+def test_price_steps_explicit_nominal_point_is_identity():
+    """Passing (FREQ_HZ, VDD) explicitly must be bit-for-bit the
+    default path — the scale_power fast-path contract."""
+    spec = BandwidthSpec.paper_default()
+    for df in ("os", "dos", "ws", "is"):
+        a = _price(df, 128, 300, 128, 8, 8, 4, "tsv", spec)
+        b = _price(df, 128, 300, 128, 8, 8, 4, "tsv", spec,
+                   C.FREQ_HZ, C.VDD)
+        assert a == b, df
+
+
+@pytest.mark.parametrize("dataflow", ["os", "dos", "ws", "is"])
+@pytest.mark.parametrize("tech", ["tsv", "miv"])
+def test_price_steps_lowest_dvfs_state(dataflow, tech):
+    d = DvfsSpec()
+    f0, v0 = float(d.freqs_hz()[0]), float(d.vdds_v[0])
+    assert f0 < C.FREQ_HZ and v0 < C.VDD  # genuinely off-nominal
+
+    spec = BandwidthSpec.paper_default()
+    nom = _price(dataflow, 128, 300, 128, 8, 8, 4, tech, spec)
+    low = _price(dataflow, 128, 300, 128, 8, 8, 4, tech, spec, f0, v0)
+
+    # cycle counts are clock-relative: compute and vlink don't move
+    assert low["compute_cycles"] == nom["compute_cycles"]
+    assert low["vlink_cycles"] == nom["vlink_cycles"]
+    assert low["dram_bytes"] == nom["dram_bytes"]
+    assert low["sram_need_bytes"] == nom["sram_need_bytes"]
+    # DRAM delivers a fixed bytes/s, so its cycle cost scales with f
+    assert low["mem_cycles"] == pytest.approx(
+        nom["mem_cycles"] * f0 / C.FREQ_HZ, rel=1e-12)
+
+    # the canonical DVFS power split
+    sd = (f0 / C.FREQ_HZ) * (v0 / C.VDD) ** 2
+    ss = (v0 / C.VDD) ** 2
+    assert low["static_w"] == pytest.approx(nom["static_w"] * ss, rel=1e-12)
+    assert low["dynamic_w"] == pytest.approx(nom["dynamic_w"] * sd, rel=1e-12)
+    assert low["total_w"] == pytest.approx(
+        nom["static_w"] * ss + nom["dynamic_w"] * sd, rel=1e-12)
+    assert low["total_w"] < nom["total_w"]
+
+    # wall clock stretches by the frequency ratio of the *total* cycles
+    assert low["seconds"] == pytest.approx(
+        low["total_cycles"] / f0, rel=1e-12)
+    assert low["energy_j"] == pytest.approx(
+        (low["total_w"] * low["compute_cycles"]
+         + low["static_w"] * low["stall_cycles"]) / f0, rel=1e-12)
+
+
+def test_price_steps_zero_m_degenerate_step():
+    """M = 0: no MACs, no activations — but the weight panel still has
+    to be fetched, so the step is pure memory stall. Power keys are
+    NaN by design (watts over zero compute-seconds is undefined; the
+    serving simulator never emits a zero-work step)."""
+    spec = BandwidthSpec.paper_default()
+    with np.errstate(invalid="ignore"):
+        pr = _price("dos", 0, 64, 64, 8, 8, 2, "tsv", spec)
+
+    assert pr["compute_cycles"] == 0.0
+    assert pr["vlink_cycles"] == 0.0 and pr["vlink_bytes"] == 0.0
+    # compulsory traffic: the K x N weight panel, nothing else
+    assert pr["dram_bytes"] == 64 * 64 * spec.bytes_in
+    assert pr["mem_cycles"] == pr["dram_bytes"] / spec.dram_bytes_per_cycle
+    assert pr["total_cycles"] == pr["mem_cycles"]
+    assert pr["stall_cycles"] == pr["total_cycles"]  # 100% stalled
+    assert pr["bound_idx"] == BOUND_NAMES.index("memory")
+    assert pr["seconds"] == pr["total_cycles"] / C.FREQ_HZ
+    # static power is well-defined (leakage doesn't need work)...
+    assert np.isfinite(pr["static_w"]) and pr["static_w"] > 0
+    # ...but per-op power and energy are NaN, never a silent zero
+    for k in ("total_w", "dynamic_w", "peak_w", "tier_w", "energy_j"):
+        assert np.isnan(pr[k]), k
+
+
+def test_price_steps_vlink_bound_step():
+    """A short-contraction GEMM on a tall, narrow TSV stack: each fold
+    carries only ~12 MAC cycles while the shared TSV bus needs ~15 to
+    drain the partial-sum plane per boundary — the vertical links are
+    the critical path."""
+    spec = BandwidthSpec.paper_default()
+    pr = _price("dos", 64, 8, 64, 2, 2, 8, "tsv", spec)
+
+    assert pr["bound_idx"] == BOUND_NAMES.index("vlink")
+    assert pr["vlink_cycles"] > pr["compute_cycles"]
+    assert pr["vlink_cycles"] > pr["mem_cycles"]
+    assert pr["total_cycles"] == pr["vlink_cycles"]
+    assert pr["stall_cycles"] == pr["total_cycles"] - pr["compute_cycles"]
+    assert pr["vlink_bytes"] > 0
+    # MIV links at the same design point are wide enough to hide it
+    miv = _price("dos", 64, 8, 64, 2, 2, 8, "miv", spec)
+    assert miv["bound_idx"] != BOUND_NAMES.index("vlink")
+    assert miv["total_cycles"] < pr["total_cycles"]
